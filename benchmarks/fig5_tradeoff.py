@@ -1,0 +1,36 @@
+"""Fig. 5 reproduction: communication-computation tradeoff (IoT).
+
+J_eta = eta * J_comm + (1-eta) * J_comp. Validates: the optimized solution
+adapts to the weighting (comm-heavy eta gives lower comm, comp-heavy gives
+lower comp), and the weighted total has an interior minimum — neither
+extreme is universally optimal."""
+from __future__ import annotations
+
+import json
+
+from repro.core import CostModel, iot, solve_alt
+
+ETAS = (0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95)
+
+
+def run(print_fn=print) -> dict:
+    out = {}
+    for eta in ETAS:
+        r = solve_alt(iot(cost=CostModel(w_comm=eta, w_comp=1.0 - eta)))
+        out[str(eta)] = {"J_eta": r.J, "J_comm": r.J_comm, "J_comp": r.J_comp}
+        print_fn(
+            f"fig5,eta={eta:4.2f} J_eta={r.J:12.3f} "
+            f"comm={r.J_comm:12.2f} comp={r.J_comp:12.2f}"
+        )
+    js = [out[str(e)]["J_eta"] for e in ETAS]
+    interior_min = min(js[1:-1])
+    assert interior_min <= js[0] and interior_min <= js[-1], js
+    # Solutions adapt: comm-heavy weighting yields lower comm cost than
+    # comp-heavy weighting, and vice versa.
+    assert out[str(ETAS[-1])]["J_comm"] < out[str(ETAS[0])]["J_comm"]
+    assert out[str(ETAS[0])]["J_comp"] < out[str(ETAS[-1])]["J_comp"]
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=1))

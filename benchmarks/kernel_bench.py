@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: jnp oracle paths timed on CPU; Pallas kernels
+validated in interpret mode (wall-clock on CPU interpret is meaningless —
+the TPU perf argument lives in the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_chunked, attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.minplus.kernel import minplus_matmul_pallas
+from repro.kernels.minplus.ops import apsp
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(print_fn=print) -> dict:
+    out = {}
+    rng = np.random.RandomState(0)
+
+    # APSP (jnp path) across graph sizes — the placement step's inner loop.
+    for v in (32, 128, 512):
+        w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
+        w[rng.rand(v, v) < 0.7] = 1e18
+        us = _time(jax.jit(apsp), jnp.asarray(w))
+        out[f"apsp_v{v}_us"] = us
+        print_fn(f"kernel,apsp v={v:4d}  {us:10.1f} us/call")
+
+    # minplus Pallas (interpret) vs oracle: correctness + relative cost.
+    a = jnp.asarray(rng.uniform(0, 5, (256, 256)).astype(np.float32))
+    got = minplus_matmul_pallas(a, a, interpret=True)
+    from repro.kernels.minplus.ref import minplus_matmul_ref
+
+    err = float(jnp.max(jnp.abs(got - minplus_matmul_ref(a, a))))
+    out["minplus_interpret_err"] = err
+    print_fn(f"kernel,minplus_pallas interpret err={err:.2e}")
+
+    # attention: chunked-flash jnp vs naive ref (the memory-bound fix).
+    q = jnp.asarray(rng.randn(1, 8, 1024, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 1024, 64), jnp.float32)
+    v_ = jnp.asarray(rng.randn(1, 2, 1024, 64), jnp.float32)
+    us_ref = _time(jax.jit(lambda *x: attention_ref(*x)), q, k, v_)
+    us_chk = _time(jax.jit(lambda *x: attention_chunked(*x)), q, k, v_)
+    out["attn_ref_us"] = us_ref
+    out["attn_chunked_us"] = us_chk
+    print_fn(f"kernel,attention S=1024 ref={us_ref:.0f}us chunked={us_chk:.0f}us")
+
+    got = flash_attention_pallas(q, k, v_, interpret=True)
+    err = float(
+        jnp.max(jnp.abs(got - attention_ref(q, k, v_)))
+    )
+    out["flash_interpret_err"] = err
+    print_fn(f"kernel,flash_pallas interpret err={err:.2e}")
+    assert err < 5e-3
+    return out
+
+
+if __name__ == "__main__":
+    run()

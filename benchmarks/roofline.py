@@ -1,0 +1,161 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = sum_k factor_k * collective_bytes_k / link_bw
+
+(The dry-run's HLO analyzer reports per-device quantities with while-loop
+trip scaling, so dividing by per-chip rates equals the spec's
+"total / (chips x rate)".) Factors: all-reduce 2x (ring send+recv),
+everything else 1x.
+
+Also reports MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active
+params, D = global tokens per step; the ratio MODEL_FLOPS/HLO_FLOPs exposes
+remat recompute + causal-rectangle waste; and the MFU bound
+= model-flops-time / max(term) — the roofline fraction used by section Perf.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--tag TAG] [--csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_record(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    chips = r["n_devices"]
+    flops_dev = r["hlo_flops"]
+    bytes_dev = r["hlo_bytes_accessed"]
+    coll = r.get("collective_bytes", {})
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = sum(
+        COLLECTIVE_FACTORS.get(k, 1.0) * v for k, v in coll.items()
+    ) / LINK_BW
+
+    mf = model_flops(r["arch"], r["shape"])
+    t_model = mf / (chips * PEAK_FLOPS)
+    bound = max(t_compute, t_memory, t_coll, 1e-30)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "tag": r.get("tag", ""),
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops_dev * chips, 1e-30),
+        "mfu_bound": t_model / bound,
+        "per_device_argument_gib": r.get("per_device_argument_gib"),
+    }
+
+
+LEVERS = {
+    "compute": "cut recompute (remat policy) / causal-triangular attention schedule",
+    "memory": "larger fused blocks; keep weights resident (less re-streaming)",
+    "collective": "re-shard to reduce per-layer gathers; overlap collectives with compute",
+}
+
+
+def load_all(tag: str | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        a = analyze_record(r)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'mesh':8s} {'chips':5s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+        f"{'dominant':>10s} {'useful':>7s} {'MFU_bound':>9s}  variant"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for a in rows:
+        lines.append(
+            f"{a['arch']:22s} {a['shape']:12s} {a['mesh']:8s} {a['chips']:<5d} "
+            f"{a['t_compute_s']:>10.4g} {a['t_memory_s']:>10.4g} "
+            f"{a['t_collective_s']:>10.4g} {a['dominant']:>10s} "
+            f"{a['useful_ratio']:>7.3f} {a['mfu_bound']:>9.3f}  "
+            f"{a['tag'] or 'baseline'}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.tag)
+    if not rows:
+        print("no dry-run results found — run repro.launch.dryrun first")
+        return 1
+    if args.csv:
+        keys = list(rows[0].keys())
+        print(",".join(keys))
+        for a in rows:
+            print(",".join(str(a[k]) for k in keys))
+    else:
+        print(fmt_table(rows))
+        print()
+        for dom in ("compute", "memory", "collective"):
+            n = sum(1 for a in rows if a["dominant"] == dom)
+            if n:
+                print(f"{n:3d} cells {dom}-bound -> lever: {LEVERS[dom]}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

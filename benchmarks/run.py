@@ -1,0 +1,66 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure plus
+the framework-level benches. Prints `name,<payload>` lines and exits nonzero
+if any paper claim fails.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig2_scenarios,
+    fig4_load_sweep,
+    fig5_tradeoff,
+    kernel_bench,
+    scale_control_plane,
+    table1_topologies,
+)
+
+BENCHES = {
+    "table1": table1_topologies.run,   # Table I scenario configs
+    "fig2": fig2_scenarios.run,        # scenarios x methods (headline)
+    "fig4": fig4_load_sweep.run,       # load sweep
+    "fig5": fig5_tradeoff.run,         # comm/comp tradeoff
+    "kernels": kernel_bench.run,       # Pallas kernels vs oracles
+    "scale": scale_control_plane.run,  # beyond-paper: fleet-scale control
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    args = ap.parse_args()
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        try:
+            BENCHES[name]()
+            print(f"=== {name} done ({time.time() - t0:.1f}s) ===", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    # Roofline table (requires dry-run artifacts; informational).
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.load_all()
+        if rows:
+            print("=== roofline (from dry-run artifacts) ===")
+            print(roofline.fmt_table(rows))
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}")
+        return 1
+    print("all benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

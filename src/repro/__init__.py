@@ -1,0 +1,14 @@
+"""repro: congestion-aware partition placement & routing for DNN inference
+(Zhang & Yadav, 2026) as a production-grade JAX framework.
+
+Layers:
+  repro.core        the paper's joint placement/routing optimizer (control plane)
+  repro.kernels     Pallas TPU kernels (min-plus APSP, flash attention) + oracles
+  repro.models      the 10 assigned architectures (data plane)
+  repro.partition   model -> partition profile bridge (L0/L1/L2, workloads)
+  repro.distributed sharding rules, pipeline runner
+  repro.data/optim/checkpoint  training substrate
+  repro.launch      mesh, dry-run, train, serve entry points
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,113 @@
+"""Fault-tolerant checkpointing.
+
+Properties required at 1000-node scale, implemented here:
+  * atomic:      write to step_NNNNNN.tmp/, fsync, rename — a preempted save
+                 never corrupts the latest good checkpoint;
+  * keep-K:      bounded disk, oldest pruned after a successful save;
+  * self-descr.: tree structure + dtypes stored in a manifest, so restore
+                 can validate against the running config;
+  * mesh-shape-agnostic: arrays are saved UNSHARDED (logical values); restore
+                 device_puts onto whatever mesh/sharding the new job uses —
+                 this is what makes elastic re-scaling work (tests cover
+                 save on one mesh shape, restore on another);
+  * resumable data stream: the pipeline state rides along.
+
+On a real cluster the np.save calls become a parallel writer per host with
+process-local shards; the manifest/atomic-rename/keep-K logic is identical.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- helpers -----------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save/restore ------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None):
+        """tree: pytree of arrays. extra: small json-able state (data stream,
+        rng, schedule position...)."""
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(flat),
+            "leaves": [],
+            "extra": extra or {},
+        }
+        for i, leaf in enumerate(flat):
+            arr = np.asarray(leaf)
+            np.save(tmp / f"leaf_{i:05d}.npy", arr)
+            manifest["leaves"].append(
+                {"i": i, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            )
+        with open(tmp / "manifest.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = self._step_dir(step)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic on POSIX
+        self._prune()
+
+    def restore(self, step: int | None, like_tree, *, shardings=None):
+        """Restore into the structure of like_tree. If shardings given
+        (a congruent tree of NamedSharding), device_put accordingly —
+        the mesh may differ from the one that saved."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat, treedef = jax.tree_util.tree_flatten(like_tree)
+        assert manifest["n_leaves"] == len(flat), (
+            f"checkpoint has {manifest['n_leaves']} leaves, model needs {len(flat)}"
+        )
+        loaded = []
+        for i, ref in enumerate(flat):
+            arr = np.load(d / f"leaf_{i:05d}.npy")
+            want = tuple(getattr(ref, "shape", arr.shape))
+            assert tuple(arr.shape) == want, (i, arr.shape, want)
+            loaded.append(arr)
+        tree = jax.tree_util.tree_unflatten(treedef, loaded)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        return tree, manifest["extra"], step
+
+    def _prune(self):
+        steps = self.steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,62 @@
+"""Architecture registry: --arch <id> resolution + reduced smoke configs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "hymba-1.5b": "repro.configs.hymba_1_5b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def reduced_config(name: str) -> ModelConfig:
+    """Same-family tiny config for CPU smoke tests: few layers, narrow width,
+    few experts, tiny vocab — exercises the identical code paths."""
+    cfg = get_config(name)
+    kv = min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0
+    heads = 4 if cfg.n_heads else 0
+    updates = dict(
+        name=cfg.name + "-reduced",
+        n_layers=2,
+        d_model=128,
+        vocab=512,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=32 if cfg.n_heads else 0,
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        frontend_dim=48 if cfg.frontend != "none" else 0,
+        remat=False,
+    )
+    if cfg.family == "moe":
+        updates.update(
+            n_experts=min(cfg.n_experts, 8),
+            top_k=min(cfg.top_k, 2),
+            moe_d_ff=64,
+            shared_d_ff=64 if cfg.shared_d_ff else 0,
+        )
+    if cfg.family in ("ssm", "hybrid"):
+        updates.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=16)
+    if cfg.family == "encdec":
+        updates.update(n_dec_layers=2)
+    if cfg.sliding_window is not None:
+        updates.update(sliding_window=32)
+    return dataclasses.replace(cfg, **updates)

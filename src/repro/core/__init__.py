@@ -1,0 +1,25 @@
+"""The paper's contribution: congestion-aware joint partition placement and
+routing for partitioned DNN inference over multi-hop edge networks."""
+from .structs import (  # noqa: F401
+    Apps,
+    BIG,
+    BIG_THRESHOLD,
+    CostModel,
+    Network,
+    Problem,
+    State,
+    forwarding_mass,
+)
+from .flow import loads, objective, stage_traffic, total_absorbed  # noqa: F401
+from .forwarding import forwarding_sweep, forwarding_update  # noqa: F401
+from .placement import placement_update, repair_phi, structured_init  # noqa: F401
+from .alt import (  # noqa: F401
+    ALL_METHODS,
+    Result,
+    compare_all,
+    solve_alt,
+    solve_colocated,
+    solve_congunaware,
+    solve_oneshot,
+)
+from .scenarios import SCENARIOS, geant, iot, mesh, random_connected, smallworld  # noqa: F401

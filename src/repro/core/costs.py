@@ -1,0 +1,68 @@
+"""Congestion-dependent communication / computation costs (paper section II).
+
+The paper's canonical choice is the M/M/1 queue-length cost D(F) = F/(mu-F),
+interpreted via Little's law as (scaled) expected delay. It is increasing,
+convex, differentiable, D(0)=0 — but blows up at F = mu. During optimization
+(and deliberately in the load-sweep experiment) iterates can exceed capacity,
+so we continue the curve beyond rho_max * mu with the C^1 quadratic extension
+that matches value, slope and curvature at the junction. The extension is
+still increasing + convex, so all marginal-cost machinery stays valid.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .structs import CostModel
+
+
+def _mm1(load, cap, rho_max):
+    """Smoothed M/M/1 queue length  load/(cap-load)  with quadratic tail."""
+    cap = jnp.maximum(cap, 1e-9)
+    knee = rho_max * cap
+    gap = cap - knee  # = (1-rho_max) * cap > 0
+    # Values at the knee (value / slope / curvature of the true M/M/1 curve).
+    v = knee / gap
+    s = cap / (gap * gap)
+    c = 2.0 * cap / (gap * gap * gap)
+    d = load - knee
+    ext = v + s * d + 0.5 * c * d * d
+    safe = jnp.minimum(load, knee)  # avoid div-by-~0 in the untaken branch
+    base = safe / (cap - safe)
+    return jnp.where(load <= knee, base, ext)
+
+
+def _mm1_prime(load, cap, rho_max):
+    cap = jnp.maximum(cap, 1e-9)
+    knee = rho_max * cap
+    gap = cap - knee
+    s = cap / (gap * gap)
+    c = 2.0 * cap / (gap * gap * gap)
+    safe = jnp.minimum(load, knee)
+    base = cap / jnp.square(cap - safe)
+    ext = s + c * (load - knee)
+    return jnp.where(load <= knee, base, ext)
+
+
+def link_cost(F, mu, cost: CostModel):
+    """D_ij(F_ij) elementwise; zero where capacity is BIG-sentinel/no link."""
+    if cost.kind == "linear":
+        return F / jnp.maximum(mu, 1e-9)
+    return _mm1(F, mu, cost.rho_max)
+
+
+def link_cost_prime(F, mu, cost: CostModel):
+    if cost.kind == "linear":
+        return 1.0 / jnp.maximum(mu, 1e-9) * jnp.ones_like(F)
+    return _mm1_prime(F, mu, cost.rho_max)
+
+
+def comp_cost(G, nu, cost: CostModel):
+    if cost.kind == "linear":
+        return G / jnp.maximum(nu, 1e-9)
+    return _mm1(G, nu, cost.rho_max)
+
+
+def comp_cost_prime(G, nu, cost: CostModel):
+    if cost.kind == "linear":
+        return 1.0 / jnp.maximum(nu, 1e-9) * jnp.ones_like(G)
+    return _mm1_prime(G, nu, cost.rho_max)

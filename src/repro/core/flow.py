@@ -1,0 +1,141 @@
+"""Stage-wise traffic flow, link/node loads, and the objective J (Eqs. 3-7).
+
+The paper's recursion (3) defines, per application a and stage k, the node
+traffic t_i^{a,k}. Under loop-free forwarding (guaranteed by the blocking rule
+in forwarding.py and by the shortest-path-tree initialization/repair), the
+forwarding matrix Phi^{a,k} is nilpotent, hence (I - Phi^T) is invertible and
+
+    t^{a,k} = (I - (Phi^{a,k})^T)^{-1} b^{a,k}
+
+with stage sources
+
+    b^{a,0} = lambda_a e_{s_a}
+    b^{a,1} = x^{a,1} .* t^{a,0}    (partition 1 host converts stage 0 -> 1)
+    b^{a,2} = x^{a,2} .* t^{a,1}.
+
+TPU adaptation (DESIGN.md section 3): instead of the paper's per-node recursive
+evaluation, we batch the three solves over applications with vmap — dense
+[V,V] solves on the MXU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import costs
+from .structs import Apps, Network, Problem, State, one_hot
+
+
+def _solve_t(phi_k: jax.Array, b: jax.Array) -> jax.Array:
+    """t = (I - phi_k^T)^{-1} b for one app/stage. phi_k: [V,V], b: [V]."""
+    n = phi_k.shape[-1]
+    eye = jnp.eye(n, dtype=phi_k.dtype)
+    return jnp.linalg.solve(eye - phi_k.T, b)
+
+
+@jax.jit
+def stage_traffic(problem: Problem, state: State) -> jax.Array:
+    """[A, K, V] traffic rate t_i^{a,k} (requests/s)."""
+    n = problem.net.n_nodes
+    apps = problem.apps
+    src_oh = one_hot(apps.src, n)  # [A, V]
+
+    b0 = apps.lam[:, None] * src_oh
+    t0 = jax.vmap(_solve_t)(state.phi[:, 0], b0)
+    b1 = state.x[:, 0, :] * t0
+    t1 = jax.vmap(_solve_t)(state.phi[:, 1], b1)
+    b2 = state.x[:, 1, :] * t1
+    t2 = jax.vmap(_solve_t)(state.phi[:, 2], b2)
+    return jnp.stack([t0, t1, t2], axis=1)
+
+
+@jax.jit
+def loads(problem: Problem, state: State, t: jax.Array | None = None):
+    """Link load F [V,V] (Eq. 5) and node computation load G [V] (Eq. 6)."""
+    if t is None:
+        t = stage_traffic(problem, state)
+    apps = problem.apps
+    # f^{a,k}_{ij} = t^{a,k}_i phi^{a,k}_{ij}  (Eq. 4)
+    f = t[..., :, None] * state.phi  # [A, K, V, V]
+    F = jnp.einsum("ak,akij->ij", apps.L, f)
+    # G_i = sum_a sum_p w^{a,p} x^{a,p}_i t^{a,p-1}_i
+    G = jnp.einsum("ap,apv,apv->v", apps.w, state.x, t[:, :2, :])
+    return F, G
+
+
+@jax.jit
+def objective(problem: Problem, state: State):
+    """J(x, phi) plus a breakdown dict (Eq. 7 / the Fig-5 weighted variant)."""
+    t = stage_traffic(problem, state)
+    F, G = loads(problem, state, t)
+    net, cm = problem.net, problem.cost
+    D = costs.link_cost(F, net.mu, cm) * net.adj
+    C = costs.comp_cost(G, net.nu, cm)
+    j_comm = jnp.sum(D)
+    j_comp = jnp.sum(C)
+    J = cm.w_comm * j_comm + cm.w_comp * j_comp
+    return J, {"J": J, "J_comm": j_comm, "J_comp": j_comp, "F": F, "G": G, "t": t}
+
+
+@jax.jit
+def marginal_link_weights(problem: Problem, F: jax.Array) -> jax.Array:
+    """w_comm * D'_ij(F_ij) on edges, BIG elsewhere: base weights for both the
+    forwarding marginals (Eq. 10) and the placement surrogate (Eqs. 12-13)."""
+    from .structs import BIG
+
+    net, cm = problem.net, problem.cost
+    dp = cm.w_comm * costs.link_cost_prime(F, net.mu, cm)
+    return jnp.where(net.adj > 0, dp, BIG)
+
+
+@jax.jit
+def marginal_comp(problem: Problem, G: jax.Array) -> jax.Array:
+    """kappa^{a,p}_i = w^{a,p} * w_comp * C'_i(G_i)   [A, P, V] (Eq. 12)."""
+    cm = problem.cost
+    cp = cm.w_comp * costs.comp_cost_prime(G, problem.net.nu, cm)  # [V]
+    return problem.apps.w[:, :, None] * cp[None, None, :]
+
+
+def objective_with_injection(
+    problem: Problem, state: State, a: int, k: int, inj: jax.Array
+):
+    """J when an extra exogenous stage-k source `inj` [V] is added for app a.
+
+    Used to validate the marginal machinery: Gallager's identity says
+    grad_inj J |_{inj=0} = q^{a,k} (the cost-to-go from marginals.py).
+    """
+    n = problem.net.n_nodes
+    apps = problem.apps
+    src_oh = one_hot(apps.src, n)
+
+    b0 = apps.lam[:, None] * src_oh
+    if k == 0:
+        b0 = b0.at[a].add(inj)
+    t0 = jax.vmap(_solve_t)(state.phi[:, 0], b0)
+    b1 = state.x[:, 0, :] * t0
+    if k == 1:
+        b1 = b1.at[a].add(inj)
+    t1 = jax.vmap(_solve_t)(state.phi[:, 1], b1)
+    b2 = state.x[:, 1, :] * t1
+    if k == 2:
+        b2 = b2.at[a].add(inj)
+    t2 = jax.vmap(_solve_t)(state.phi[:, 2], b2)
+    t = jnp.stack([t0, t1, t2], axis=1)
+
+    F, G = loads(problem, state, t)
+    net, cm = problem.net, problem.cost
+    D = costs.link_cost(F, net.mu, cm) * net.adj
+    C = costs.comp_cost(G, net.nu, cm)
+    return cm.w_comm * jnp.sum(D) + cm.w_comp * jnp.sum(C)
+
+
+def total_absorbed(problem: Problem, state: State) -> jax.Array:
+    """[A] sanity metric: stage-2 traffic absorbed at each destination.
+
+    Equals lambda_a when forwarding is consistent (conservation test)."""
+    t = stage_traffic(problem, state)
+    n = problem.net.n_nodes
+    dst_oh = one_hot(problem.apps.dst, n)
+    return jnp.sum(t[:, 2, :] * dst_oh, axis=-1)

@@ -1,0 +1,75 @@
+"""Downstream marginal costs q_i^{a,k} and link marginals delta (Eq. 10).
+
+Gallager's cost-to-go q summarizes the marginal increase of the whole-system
+cost per extra unit of stage-k traffic injected at node i, under the current
+forwarding state:
+
+  q^{a,2}_i = sum_j phi^{a,2}_{ij} (L_{a,2} D'_{ij} + q^{a,2}_j)           (=0 at d_a)
+  q^{a,1}_i = sum_j phi^{a,1}_{ij} (L_{a,1} D'_{ij} + q^{a,1}_j)
+              + x^{a,2}_i (kappa^{a,2}_i + q^{a,2}_i)
+  q^{a,0}_i = sum_j phi^{a,0}_{ij} (L_{a,0} D'_{ij} + q^{a,0}_j)
+              + x^{a,1}_i (kappa^{a,1}_i + q^{a,1}_i)
+
+i.e. a host node absorbs the stage, pays the computation marginal kappa, and
+re-injects the next stage locally. Each line is a linear fixed point
+(I - Phi) q = c, solved batched over applications (TPU adaptation of the
+paper's backward recursion toward upstream, DESIGN.md section 3).
+
+delta^{a,k}_{ij} = L_{a,k} D'_{ij}(F_{ij}) + q^{a,k}_j  is the per-link
+forwarding marginal used by both the forwarding update and its blocking rule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flow import loads, marginal_comp, marginal_link_weights, stage_traffic
+from .structs import BIG, Problem, State
+
+
+def _solve_q(phi_k: jax.Array, c: jax.Array) -> jax.Array:
+    n = phi_k.shape[-1]
+    eye = jnp.eye(n, dtype=phi_k.dtype)
+    return jnp.linalg.solve(eye - phi_k, c)
+
+
+@jax.jit
+def cost_to_go(problem: Problem, state: State, t: jax.Array | None = None):
+    """Returns (q [A,K,V], dp [V,V], kappa [A,P,V], t [A,K,V], F, G)."""
+    if t is None:
+        t = stage_traffic(problem, state)
+    F, G = loads(problem, state, t)
+    dp = marginal_link_weights(problem, F)  # BIG off-edges
+    dp_edges = jnp.where(problem.net.adj > 0, dp, 0.0)  # safe for sums
+    kappa = marginal_comp(problem, G)  # [A, P, V]
+    L = problem.apps.L  # [A, 3]
+
+    def link_term(phi_k, Lk):
+        # c_i = sum_j phi_{ij} * L_k * D'_{ij}
+        return Lk * jnp.sum(phi_k * dp_edges[None, :, :], axis=-1)
+
+    # Stage 2 (toward destinations).
+    c2 = link_term(state.phi[:, 2], L[:, 2][:, None])
+    q2 = jax.vmap(_solve_q)(state.phi[:, 2], c2)
+    # Stage 1 (toward partition-2 hosts, then continue as stage 2).
+    c1 = link_term(state.phi[:, 1], L[:, 1][:, None])
+    c1 = c1 + state.x[:, 1, :] * (kappa[:, 1, :] + q2)
+    q1 = jax.vmap(_solve_q)(state.phi[:, 1], c1)
+    # Stage 0 (toward partition-1 hosts, then continue as stage 1).
+    c0 = link_term(state.phi[:, 0], L[:, 0][:, None])
+    c0 = c0 + state.x[:, 0, :] * (kappa[:, 0, :] + q1)
+    q0 = jax.vmap(_solve_q)(state.phi[:, 0], c0)
+
+    q = jnp.stack([q0, q1, q2], axis=1)  # [A, K, V]
+    return q, dp, kappa, t, F, G
+
+
+@jax.jit
+def link_marginals(problem: Problem, state: State):
+    """delta^{a,k}_{ij} (Eq. 10), BIG on non-edges. Returns (delta, aux)."""
+    q, dp, kappa, t, F, G = cost_to_go(problem, state)
+    L = problem.apps.L  # [A, 3]
+    # delta[a,k,i,j] = L[a,k] * dp[i,j] + q[a,k,j]
+    delta = L[:, :, None, None] * dp[None, None, :, :] + q[:, :, None, :]
+    delta = jnp.where(problem.net.adj[None, None] > 0, delta, BIG)
+    return delta, {"q": q, "dp": dp, "kappa": kappa, "t": t, "F": F, "G": G}

@@ -1,0 +1,234 @@
+"""Marginal-cost placement reassignment (paper Eqs. 12-16) + phi repair.
+
+Because the stage-k edge weight L_{a,k} D'_{ij}(F_{ij}) differs across stages
+only by the positive scalar L_{a,k}, a single APSP under the base weight
+D'_{ij}(F_{ij}) serves every (application, stage): Gamma^{a,k}_{uv} =
+L_{a,k} * dist[u, v]  (the paper's section III-B observation). On TPU the APSP
+is tropical matrix squaring (kernels/minplus), not Dijkstra — DESIGN.md 3.
+
+Candidate scores (upstream comm + local comp + downstream comm):
+
+    S_{a,1}(i) = L_{a,0} dist[s_a, i] + kappa^{a,1}_i + L_{a,1} dist[i, h^2_a]
+    S_{a,2}(i) = L_{a,1} dist[h^1_a, i] + kappa^{a,2}_i + L_{a,2} dist[i, d_a]
+
+Partition 1 is updated first (with the current host of partition 2), then
+partition 2 with the *new* host of partition 1 (paper footnote 5).
+
+After placement changes, stale forwarding would strand traffic (the old host
+no longer absorbs), so per (app, stage) whose target host changed we rebuild
+phi as the shortest-path next-hop tree toward the new host under the CURRENT
+congested marginals — a congestion-aware warm restart that keeps (I - Phi^T)
+invertible. Stages whose host did not change keep their refined multipath phi.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.minplus import apsp_with_nexthop
+from .marginals import cost_to_go
+from .structs import Problem, State, one_hot
+
+
+def _sp_tree_phi(nexthop_to: jax.Array, target: jax.Array, mass: jax.Array, n: int):
+    """phi rows = one-hot(next hop toward `target`), scaled by row mass.
+
+    nexthop_to: [V, V] next-hop table (column t = toward target t).
+    """
+    nh = nexthop_to[:, target]  # [V]
+    rows = jax.nn.one_hot(nh, n, dtype=jnp.float32)  # [V, V]
+    return rows * mass[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("colocate", "use_pallas", "move_margin"))
+def placement_update(
+    problem: Problem,
+    state: State,
+    *,
+    colocate: bool = False,
+    use_pallas: bool = False,
+    move_margin: float = 0.02,
+) -> State:
+    """One placement reassignment sweep over all applications.
+
+    The paper's "sequentially update" (footnote 5 + Eq. 16) is implemented as
+    a lax.scan over applications with an *incrementally maintained* compute
+    load G: each reassignment removes the app's own load from its old host
+    and adds it at the chosen host before the next app is scored. Without
+    this, every app sees the same cheapest node and stampedes onto it
+    (a placement 2-cycle); with it, the sweep is a genuine sequential greedy
+    descent on the placement-side objective. Link marginals (the Gamma
+    distances) stay fixed during the sweep, exactly as in the paper.
+
+    Under consistent forwarding, all stage-(p-1) traffic of app a is absorbed
+    at its partition-p host, so the app's own compute contribution at the
+    host is w_{a,p} * lambda_a (conservation), which is what we shift.
+    """
+    n = problem.net.n_nodes
+    apps = problem.apps
+    q, dp, kappa, t, F, G = cost_to_go(problem, state)
+    dist, nexthop = apsp_with_nexthop(dp, use_pallas=use_pallas)
+
+    hosts = state.hosts()  # [A, 2]
+    L = apps.L
+    cm = problem.cost
+    nu = problem.net.nu
+
+    from . import costs as _costs
+
+    def cprime(Gv):
+        return cm.w_comp * _costs.comp_cost_prime(Gv, nu, cm)
+
+    dist_from_src = dist[apps.src, :]  # [A, V]
+    dist_to_dst = dist[:, apps.dst].T  # [A, V]
+
+    def body(Gv, inputs):
+        (a_src_d, a_dst_d, h1_old, h2_old, lam_a, L_a, w_a) = inputs
+        load1 = w_a[0] * lam_a
+        load2 = w_a[1] * lam_a
+        # Remove this app's own loads so kappa is the marginal of adding it.
+        Gv = Gv - load1 * jax.nn.one_hot(h1_old, n) - load2 * jax.nn.one_hot(h2_old, n)
+
+        def pick(S, h_old):
+            # Hysteresis: only move when the improvement beats move_margin
+            # (damps host flapping between outer iterations).
+            cand = jnp.argmin(S).astype(jnp.int32)
+            better = S[cand] < (1.0 - move_margin) * S[h_old]
+            return jnp.where(better, cand, h_old).astype(jnp.int32)
+
+        if colocate:
+            S = (
+                L_a[0] * a_src_d
+                + (w_a[0] + w_a[1]) * cprime(Gv)
+                + L_a[2] * a_dst_d
+            )
+            h1 = pick(S, h1_old)
+            h2 = h1
+            Gv = Gv + (load1 + load2) * jax.nn.one_hot(h1, n)
+        else:
+            S1 = L_a[0] * a_src_d + w_a[0] * cprime(Gv) + L_a[1] * dist[:, h2_old]
+            h1 = pick(S1, h1_old)
+            Gv = Gv + load1 * jax.nn.one_hot(h1, n)
+            S2 = L_a[1] * dist[h1, :] + w_a[1] * cprime(Gv) + L_a[2] * a_dst_d
+            h2 = pick(S2, h2_old)
+            Gv = Gv + load2 * jax.nn.one_hot(h2, n)
+        return Gv, (h1, h2)
+
+    _, (h1, h2) = jax.lax.scan(
+        body,
+        G,
+        (
+            dist_from_src,
+            dist_to_dst,
+            hosts[:, 0],
+            hosts[:, 1],
+            apps.lam,
+            L,
+            apps.w,
+        ),
+    )
+
+    x_new = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+    new_state = State(x=x_new, phi=state.phi)
+    return repair_phi(problem, state, new_state, nexthop)
+
+
+@jax.jit
+def repair_phi(
+    problem: Problem, old: State, new: State, nexthop: jax.Array
+) -> State:
+    """Rebuild phi for stages whose absorption target moved (see module doc)."""
+    n = problem.net.n_nodes
+    apps = problem.apps
+    old_hosts = old.hosts()
+    new_hosts = new.hosts()
+
+    def per_app(phi_a, oh, nh, dst):
+        h1, h2 = nh[0], nh[1]
+        # Stage 0 -> toward h1; mass 1 everywhere except the host itself.
+        m0 = 1.0 - jax.nn.one_hot(h1, n, dtype=jnp.float32)
+        tree0 = _sp_tree_phi(nexthop, h1, m0, n)
+        m1 = 1.0 - jax.nn.one_hot(h2, n, dtype=jnp.float32)
+        tree1 = _sp_tree_phi(nexthop, h2, m1, n)
+        changed1 = oh[0] != nh[0]
+        changed2 = oh[1] != nh[1]
+        phi0 = jnp.where(changed1, tree0, phi_a[0])
+        phi1 = jnp.where(changed2, tree1, phi_a[1])
+        # Stage 2 target (the destination) never moves.
+        return jnp.stack([phi0, phi1, phi_a[2]], axis=0)
+
+    phi = jax.vmap(per_app)(new.phi, old_hosts, new_hosts, apps.dst)
+    return State(x=new.x, phi=phi)
+
+
+@functools.partial(jax.jit, static_argnames=("colocate", "use_pallas"))
+def structured_init(
+    problem: Problem, *, colocate: bool = False, use_pallas: bool = False
+) -> State:
+    """Feasible structured initialization (paper section IV, method a).
+
+    Zero-load marginal weights D'_{ij}(0) give the uncongested shortest-path
+    metric; the placement scores (14)-(15) under these weights pick initial
+    hosts, and phi is initialized to the corresponding SP next-hop trees.
+    """
+    n = problem.net.n_nodes
+    apps = problem.apps
+    from . import costs as _costs
+    from .structs import BIG
+
+    dp0 = problem.cost.w_comm * _costs.link_cost_prime(
+        jnp.zeros_like(problem.net.mu), problem.net.mu, problem.cost
+    )
+    dp0 = jnp.where(problem.net.adj > 0, dp0, BIG)
+    dist, nexthop = apsp_with_nexthop(dp0, use_pallas=use_pallas)
+
+    cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
+        jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost
+    )
+    kappa0 = apps.w[:, :, None] * cp0[None, None, :]  # [A, 2, V]
+
+    L = apps.L
+    dist_from_src = dist[apps.src, :]
+    dist_to_dst = dist[:, apps.dst].T
+
+    if colocate:
+        S = (
+            L[:, 0][:, None] * dist_from_src
+            + kappa0[:, 0, :]
+            + kappa0[:, 1, :]
+            + L[:, 2][:, None] * dist_to_dst
+        )
+        h1 = jnp.argmin(S, axis=-1).astype(jnp.int32)
+        h2 = h1
+    else:
+        # Joint (h1, h2) zero-load scan: S[a, i, j] over candidate pairs.
+        S_pair = (
+            L[:, 0][:, None, None] * dist_from_src[:, :, None]
+            + kappa0[:, 0, :, None]
+            + L[:, 1][:, None, None] * dist[None, :, :]
+            + kappa0[:, 1, None, :]
+            + L[:, 2][:, None, None] * dist_to_dst[:, None, :]
+        )
+        flat = jnp.argmin(S_pair.reshape(S_pair.shape[0], -1), axis=-1)
+        h1 = (flat // n).astype(jnp.int32)
+        h2 = (flat % n).astype(jnp.int32)
+
+    x = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+
+    def per_app(h1a, h2a, dsta):
+        m0 = 1.0 - jax.nn.one_hot(h1a, n, dtype=jnp.float32)
+        m1 = 1.0 - jax.nn.one_hot(h2a, n, dtype=jnp.float32)
+        m2 = 1.0 - jax.nn.one_hot(dsta, n, dtype=jnp.float32)
+        return jnp.stack(
+            [
+                _sp_tree_phi(nexthop, h1a, m0, n),
+                _sp_tree_phi(nexthop, h2a, m1, n),
+                _sp_tree_phi(nexthop, dsta, m2, n),
+            ],
+            axis=0,
+        )
+
+    phi = jax.vmap(per_app)(h1, h2, apps.dst)
+    return State(x=x, phi=phi)

@@ -1,0 +1,149 @@
+"""Core data structures for the joint placement/routing problem (paper Eq. 1-7).
+
+All structures are registered JAX pytrees so the whole optimizer state can be
+jitted / vmapped / sharded. Shapes use the conventions:
+
+    V  = number of nodes
+    A  = number of applications (DNN inference services)
+    K  = 3 traffic stages (0: raw input, 1: intermediate feature, 2: output)
+    P  = 2 partitions (partition p consumes stage p-1 traffic, emits stage p)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# A large-but-finite stand-in for +inf: safe under addition in the tropical
+# (min,+) semiring without producing inf-inf NaNs inside kernels.
+BIG = jnp.float32(1e18)
+# Threshold above which a distance is considered unreachable.
+BIG_THRESHOLD = jnp.float32(1e17)
+
+K_STAGES = 3
+N_PARTS = 2
+
+
+def _register(cls, data_fields, meta_fields=()):
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(meta_fields)
+    )
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class Network:
+    """Directed multi-hop edge network G = (V, E) with heterogeneous resources.
+
+    adj : [V, V] float {0,1} adjacency (adj[i,j]=1 iff link (i,j) in E)
+    mu  : [V, V] link service rate (bit/s);  BIG where no link (never used)
+    nu  : [V]    node computation service rate
+    """
+
+    adj: jax.Array
+    mu: jax.Array
+    nu: jax.Array
+
+    @property
+    def n_nodes(self) -> int:
+        return self.adj.shape[-1]
+
+
+_register(Network, ["adj", "mu", "nu"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Apps:
+    """The set A of DNN inference services.
+
+    src : [A] int32  source node s_a
+    dst : [A] int32  destination node d_a (may equal src)
+    lam : [A] input request rate lambda_a (requests/s)
+    L   : [A, 3] packet size of stage k in {0,1,2} (bits/request)
+    w   : [A, 2] per-request computation workload of partition p in {1,2}
+          (node heterogeneity is carried by nu in C_i; see DESIGN.md section 8)
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    lam: jax.Array
+    L: jax.Array
+    w: jax.Array
+
+    @property
+    def n_apps(self) -> int:
+        return self.src.shape[-1]
+
+
+_register(Apps, ["src", "dst", "lam", "L", "w"])
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Congestion cost configuration.
+
+    kind      : "mm1" (D(F)=F/(mu-F), C(G)=G/(nu-G)) or "linear" (F/mu, G/nu)
+    rho_max   : load fraction beyond which the M/M/1 curve is continued by a
+                C^1 quadratic extension (keeps J finite + differentiable for
+                infeasible iterates; see DESIGN.md section 8)
+    w_comm / w_comp : objective weights (eta, 1-eta) for the Fig-5 tradeoff;
+                (1, 1) reproduces the paper's main unweighted objective.
+    """
+
+    kind: str = "mm1"
+    rho_max: float = 0.95
+    w_comm: float = 1.0
+    w_comp: float = 1.0
+
+
+_register(CostModel, [], ["kind", "rho_max", "w_comm", "w_comp"])
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    net: Network
+    apps: Apps
+    cost: CostModel
+
+
+_register(Problem, ["net", "apps", "cost"])
+
+
+@dataclasses.dataclass(frozen=True)
+class State:
+    """Decision variables of problem (7).
+
+    x   : [A, P, V] one-hot placement (x[a, p-1, i] = 1 iff partition p at i)
+    phi : [A, K, V, V] forwarding fractions phi_{ij}^{a,k}
+    """
+
+    x: jax.Array
+    phi: jax.Array
+
+    def hosts(self) -> jax.Array:
+        """[A, P] int32 host node of each partition."""
+        return jnp.argmax(self.x, axis=-1)
+
+
+_register(State, ["x", "phi"])
+
+
+def one_hot(idx: jax.Array, n: int) -> jax.Array:
+    return jax.nn.one_hot(idx, n, dtype=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def forwarding_mass(state: State, apps: Apps, n: int) -> jax.Array:
+    """[A, K, V] total forwarding fraction each node must emit per stage.
+
+    Eq. (2a): sum_j phi^{a,0}_{ij} = 1 - x^{a,1}_i  (partition-1 host absorbs)
+              sum_j phi^{a,1}_{ij} = 1 - x^{a,2}_i  (partition-2 host absorbs)
+    Eq. (2b): sum_j phi^{a,2}_{ij} = 0 at d_a else 1.
+    """
+    dst_oh = one_hot(apps.dst, n)  # [A, V]
+    m0 = 1.0 - state.x[:, 0, :]
+    m1 = 1.0 - state.x[:, 1, :]
+    m2 = 1.0 - dst_oh
+    return jnp.stack([m0, m1, m2], axis=1)

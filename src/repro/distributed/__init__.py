@@ -1,0 +1,7 @@
+from .sharding import (  # noqa: F401
+    ShardingRules,
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    to_named_shardings,
+)

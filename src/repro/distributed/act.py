@@ -1,0 +1,93 @@
+"""Activation sharding constraints.
+
+GSPMD propagation from parameter/input shardings alone lets intermediate
+layouts drift (observed in the dry-run: attention scores re-materialized at
+GLOBAL batch — a 137 TB tensor). The fix is the standard MaxText-style
+practice: explicit with_sharding_constraint at the key activation points.
+
+Models stay mesh-agnostic: they call `shard(x, kind)`; the launcher installs
+the logical->physical mapping via `activation_sharding(mesh, rules)`. When no
+context is installed (unit tests, single-device runs) `shard` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_TLS = threading.local()
+
+
+def _ctx():
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules):
+    prev = _ctx()
+    _TLS.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def _batch_axes(rules):
+    if rules.pod_axis:
+        return (rules.pod_axis, rules.data_axis)
+    return rules.data_axis
+
+
+def shard(x, kind: str):
+    """Constrain activation x at a named logical point (no-op w/o context)."""
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    m = rules.model_axis
+    b = _batch_axes(rules)
+    msize = mesh.shape[m]
+    bsize = mesh.shape[rules.data_axis] * (
+        mesh.shape[rules.pod_axis] if rules.pod_axis else 1
+    )
+    if x.shape[0] % bsize != 0:
+        b = None  # batch=1 long-context cells: replicate the batch dim
+
+    def div(dim):
+        return x.shape[dim] % msize == 0
+
+    if kind == "residual":  # [B, S, d]
+        if getattr(rules, "seq_shard_residual", False) and x.shape[1] % msize == 0:
+            spec = P(b, m, None)
+        else:
+            spec = P(b, None, None)
+    elif kind == "heads":  # [B, S, H, hd]
+        spec = P(b, None, m if div(2) else None, None)
+    elif kind == "heads_t":  # [B, H, S, hd]
+        spec = P(b, m if div(1) else None, None, None)
+    elif kind == "ffn":  # [B, S, ff]
+        spec = P(b, None, m if div(2) else None)
+    elif kind == "logits":  # [B, S, V]
+        spec = P(b, None, m if div(2) else None)
+    elif kind == "expert_buffers":  # [E, C, d] or [E, C, ff]
+        spec = P(m if x.shape[0] % msize == 0 else None, None, None)
+    elif kind == "moe_groups":  # [G, Tg, d] grouped token slabs
+        g_ax = b if x.shape[0] % max(bsize, 1) == 0 else None
+        spec = P(g_ax, None, None)
+    elif kind == "tokens_flat":  # [T, d] / [T, E] flat token tables
+        spec = P(b, None)
+    elif kind == "ssm_inner":  # [B, S, K]
+        spec = P(b, None, None)
+    elif kind == "kv_cache":  # [B, Kv, C, hd] — seq-sharded over model
+        spec = P(b, None, m if div(2) else None, None)
+    elif kind == "decode_scores":  # [B, Kv, G, C]
+        spec = P(b, None, None, m if div(3) else None)
+    else:
+        raise ValueError(kind)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        # Shape/axis mismatch (e.g. tiny smoke configs): leave unconstrained.
+        return x

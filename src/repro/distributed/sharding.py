@@ -1,0 +1,217 @@
+"""Sharding rules: map param/activation/cache tree paths -> PartitionSpecs.
+
+Baseline layout (the paper-faithful starting point for the roofline pass;
+the §Perf hillclimb iterates on these):
+
+  * TP over the "model" axis on the natural tensor-parallel dim of every
+    matmul (attention heads, FFN hidden, experts, vocab);
+  * FSDP/ZeRO over the "data" axis on the other large dim (params + Adam
+    moments are fully sharded; XLA inserts the per-layer all-gathers);
+  * batch over ("pod", "data") — the pod axis is pure DP across the DCN;
+  * decode KV caches: batch over ("pod","data"), sequence over "model"
+    (flash-decoding-style distributed softmax via GSPMD reductions).
+
+Rules are divisibility-aware: a dim is only assigned a mesh axis when the
+axis size divides it (uneven/GSPMD-padded layouts showed up as pathological
+collectives in the dry-run, e.g. Kv=8 heads over 16-way model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str | None = None  # set when the mesh has a pod dimension
+    fsdp: bool = True  # shard the non-TP dim of params over data
+    # Decode-cache layout: "seq" shards the KV sequence dim over model,
+    # "heads" shards KV heads (falls back to seq when kv % axis != 0).
+    cache_layout: str = "seq"
+    # Sequence-parallel residual stream: the scan-carried [B, S, d]
+    # activations are sharded over the model axis on S (Korthikanti-style
+    # SP) — divides stored-activation memory by the TP degree.
+    seq_shard_residual: bool = False
+    # 2D ("data"+"model") tensor parallelism for serving (hillclimb option).
+    serve_2d_tp: bool = False
+
+
+def _axis_size(mesh: Mesh, name: str | None) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name]
+
+
+def _maybe(mesh, dim_size, axis):
+    """Assign `axis` to a dim only when it divides evenly."""
+    if axis is None:
+        return None
+    return axis if dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def batch_pspec(rules: ShardingRules) -> P:
+    if rules.pod_axis:
+        return P((rules.pod_axis, rules.data_axis))
+    return P(rules.data_axis)
+
+
+def batch_axes_size(mesh: Mesh, rules: ShardingRules) -> int:
+    n = _axis_size(mesh, rules.data_axis)
+    if rules.pod_axis:
+        n *= _axis_size(mesh, rules.pod_axis)
+    return n
+
+
+def batch_pspec_for(mesh: Mesh, rules: ShardingRules, batch: int) -> P:
+    """Replicate when the global batch doesn't divide the DP axes (e.g. the
+    batch=1 long-context decode cell)."""
+    if batch % batch_axes_size(mesh, rules) == 0:
+        return batch_pspec(rules)
+    return P()
+
+
+def _param_rule(path: str, shape, mesh: Mesh, rules: ShardingRules, cfg: ModelConfig) -> P:
+    if path.endswith("/__s"):
+        return P()  # per-tensor quantization scale: replicated scalar
+    if path.endswith("/__q"):
+        path = path[: -len("/__q")]  # int8 payload shards like its parent
+    d_ax = rules.data_axis if rules.fsdp else None
+    m_ax = rules.model_axis
+    dims = len(shape)
+
+    def spec(*axes):
+        axes = list(axes) + [None] * (dims - len(axes))
+        return P(*axes)
+
+    # ---- embedding / head ----
+    if path.endswith("embed/embed"):
+        return spec(_maybe(mesh, shape[0], m_ax), _maybe(mesh, shape[1], d_ax))
+    if path.endswith("embed/lm_head"):
+        return spec(_maybe(mesh, shape[0], d_ax), _maybe(mesh, shape[1], m_ax))
+    if path.endswith("embed/frontend_proj"):
+        return spec(None, _maybe(mesh, shape[1], m_ax))
+
+    # ---- attention (leading stacked-layer dim) ----
+    if "/attn/" in path or "/self_attn/" in path or "/cross_attn/" in path:
+        leaf = path.rsplit("/", 1)[-1]
+        if leaf == "wq":  # [L, d, H, hd]
+            h_ax = _maybe(mesh, shape[2], m_ax)
+            return spec(None, _maybe(mesh, shape[1], d_ax), h_ax)
+        if leaf in ("wk", "wv"):  # [L, d, Kv, hd]
+            kv_ax = _maybe(mesh, shape[2], m_ax)
+            if kv_ax is None:
+                # few KV heads: row-parallel on d instead (psum after)
+                return spec(None, _maybe(mesh, shape[1], m_ax), None)
+            return spec(None, _maybe(mesh, shape[1], d_ax), kv_ax)
+        if leaf == "wo":  # [L, H, hd, d]
+            return spec(None, _maybe(mesh, shape[1], m_ax), None, _maybe(mesh, shape[3], d_ax))
+        if leaf == "bq":  # [L, H, hd]
+            return spec(None, _maybe(mesh, shape[1], m_ax))
+        if leaf in ("bk", "bv"):
+            return spec(None, _maybe(mesh, shape[1], m_ax))
+
+    # ---- dense / shared MLP ----
+    if path.rsplit("/", 1)[-1] in ("wi", "wg") and "/mlp" in path or "/shared/" in path and path.endswith(("wi", "wg")):
+        return spec(None, _maybe(mesh, shape[1], d_ax), _maybe(mesh, shape[2], m_ax)) if dims == 3 else P()
+    if path.endswith("/mlp/wo") or path.endswith("/shared/wo"):
+        return spec(None, _maybe(mesh, shape[1], m_ax), _maybe(mesh, shape[2], d_ax))
+
+    # ---- MoE ----
+    if path.endswith("/moe/router"):
+        return spec(None, _maybe(mesh, shape[1], d_ax), None)
+    if path.endswith(("/moe/wi_e", "/moe/wg_e")):  # [L, E, d, ff]
+        e_ax = _maybe(mesh, shape[1], m_ax)
+        if e_ax is not None:
+            return spec(None, e_ax, _maybe(mesh, shape[2], d_ax), None)
+        return spec(None, None, _maybe(mesh, shape[2], d_ax), _maybe(mesh, shape[3], m_ax))
+    if path.endswith("/moe/wo_e"):  # [L, E, ff, d]
+        e_ax = _maybe(mesh, shape[1], m_ax)
+        if e_ax is not None:
+            return spec(None, e_ax, None, _maybe(mesh, shape[3], d_ax))
+        return spec(None, None, _maybe(mesh, shape[2], m_ax), _maybe(mesh, shape[3], d_ax))
+    if path.endswith("/moe/shared_gate"):
+        return spec(None, _maybe(mesh, shape[1], d_ax), None)
+
+    # ---- SSM ----
+    if path.endswith("/ssm/in_proj"):  # [L, d, K]
+        return spec(None, _maybe(mesh, shape[1], m_ax), None)
+    if path.endswith("/ssm/out_proj"):  # [L, din, d]
+        return spec(None, _maybe(mesh, shape[1], m_ax), None)
+    if path.endswith("/ssm/conv_w") or path.endswith("/ssm/conv_b"):
+        return P()
+
+    # norms / scalars / small vectors: replicated
+    return P()
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for keypath, leaf in flat:
+        parts = []
+        for k in keypath:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def param_pspecs(cfg: ModelConfig, specs_tree, mesh: Mesh, rules: ShardingRules):
+    """PartitionSpec tree congruent with the (eval_shape) param tree."""
+    flat, treedef = _tree_paths(specs_tree)
+    pspecs = [
+        _param_rule(path, leaf.shape, mesh, rules, cfg) for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, pspecs)
+
+
+def cache_pspecs(cfg: ModelConfig, caches_tree, mesh: Mesh, rules: ShardingRules):
+    """Decode caches: [L, B, Kv, C, hd] attn; [L, B, nh, hp, n] ssm states."""
+    nb = batch_axes_size(mesh, rules)
+    m_ax = rules.model_axis
+
+    def b_of(dim_size):
+        if dim_size % nb != 0:
+            return None
+        return (rules.pod_axis, rules.data_axis) if rules.pod_axis else rules.data_axis
+
+    def rule(path: str, leaf):
+        dims = len(leaf.shape)
+        if path.endswith(("attn/k", "attn/v")) or path.endswith(("cross_k", "cross_v")):
+            # [L, B, Kv, C, hd]
+            b_ax = b_of(leaf.shape[1])
+            if rules.cache_layout == "heads" and leaf.shape[2] % _axis_size(mesh, m_ax) == 0:
+                return P(None, b_ax, m_ax, None, None)
+            return P(None, b_ax, None, _maybe(mesh, leaf.shape[3], m_ax), None)
+        if path.endswith("ssm/state"):  # [L, B, nh, hp, n]
+            return P(None, b_of(leaf.shape[1]), _maybe(mesh, leaf.shape[2], m_ax), None, None)
+        if path.endswith("ssm/conv"):  # [L, B, cw-1, conv_dim]
+            return P(None, b_of(leaf.shape[1]), None, _maybe(mesh, leaf.shape[3], m_ax))
+        if dims >= 2:
+            return P(None, b_of(leaf.shape[1]))
+        return P()
+
+    flat, treedef = _tree_paths(caches_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(path, leaf) for path, leaf in flat]
+    )
+
+
+def to_named_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(
+        lambda ps: NamedSharding(mesh, ps),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+  minplus          tropical (min,+) matmul — the APSP inner loop of the
+                   paper's placement step (TPU-native Dijkstra replacement)
+  flash_attention  blockwise GQA attention for the model zoo's dominant op
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jitted wrapper + jnp dispatch), ref.py (pure-jnp oracle used by tests).
+"""

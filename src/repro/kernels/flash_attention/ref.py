@@ -1,0 +1,128 @@
+"""Pure-jnp oracle for blockwise (flash) attention with GQA / causal / SWA.
+
+Materializes the full [B, H, Sq, Sk] score tensor — correct but memory-bound;
+used only as the test oracle and the small-shape fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Kv, Sk, D]
+    v: jax.Array,  # [B, Kv, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Softmax attention; q head h attends kv head h // (H // Kv).
+
+    q_offset: absolute position of q[..., 0, :] (for decode/chunked prefill).
+    """
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    group = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    qf = q.astype(jnp.float32).reshape(b, kv, group, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * scale
+
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+M_INIT = -1e29
+
+
+def attention_chunked(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Kv, Sk, D]
+    v: jax.Array,  # [B, Kv, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style streaming softmax in pure jnp (double lax.scan).
+
+    The memory-bounded full-attention path used by the models on long
+    sequences: peak intermediate is [B, H, q_chunk, kv_chunk] instead of
+    [B, H, Sq, Sk]. Numerically equals attention_ref (tests enforce it);
+    on TPU the Pallas kernel replaces it.
+    """
+    b, h, sq, d = q.shape
+    _, kv, sk, _ = k.shape
+    group = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    pad_q = (-sq) % qc
+    pad_k = (-sk) % kc
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = (sq + pad_q) // qc, (sk + pad_k) // kc
+
+    qs = jnp.moveaxis(qp.reshape(b, kv, group, nq, qc, d), 3, 0)  # [nq,b,kv,g,qc,d]
+    ks = jnp.moveaxis(kp.reshape(b, kv, nk, kc, d), 2, 0)  # [nk,b,kv,kc,d]
+    vs = jnp.moveaxis(vp.reshape(b, kv, nk, kc, d), 2, 0)
+
+    def q_step(_, iq_and_q):
+        iq, qblk = iq_and_q
+        qf = qblk.astype(jnp.float32)
+
+        def kv_step(carry, ik_and_kv):
+            m_run, l_run, acc = carry
+            ik, kblk, vblk = ik_and_kv
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kblk.astype(jnp.float32)) * scale
+            q_pos = q_offset + iq * qc + jnp.arange(qc)
+            k_pos = ik * kc + jnp.arange(kc)
+            msk = k_pos[None, :] < sk
+            if causal:
+                msk &= k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                msk &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(msk[None, None, None], s, NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, kv, group, qc), M_INIT, jnp.float32),
+            jnp.zeros((b, kv, group, qc), jnp.float32),
+            jnp.zeros((b, kv, group, qc, d), jnp.float32),
+        )
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # blocks: [nq, b, kv, g, qc, d] -> [b, h, sq, d]
+    out = jnp.moveaxis(blocks, 0, 3).reshape(b, kv, group, nq * qc, d)
+    return out.reshape(b, h, nq * qc, d)[:, :, :sq, :]

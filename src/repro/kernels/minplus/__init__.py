@@ -1,0 +1,1 @@
+from .ops import minplus_matmul, apsp, apsp_with_nexthop  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: tropical (min,+) matmul, the APSP inner loop.
+
+TPU adaptation of the paper's Dijkstra-based placement step (DESIGN.md
+section 3): shortest paths under the marginal link weights D'_ij(F_ij) are
+computed by tropical matrix squaring. The (min,+) semiring has no MXU support
+(the systolic array is multiply-accumulate only), so the kernel targets the
+VPU: each grid step loads MXU-aligned 128x128 tiles of A and B into VMEM and
+reduces min over the K tile in KINNER-wide chunks, keeping the broadcast
+intermediate ([bm, KINNER, bn]) small enough to live comfortably in VMEM.
+
+Grid: (M/bm, N/bn, K/bk) with K innermost ("arbitrary") so the output tile is
+revisited and used as the running-min accumulator — the standard Pallas
+matmul accumulation pattern, with (+, *) replaced by (min, +).
+
+VMEM budget per grid step (fp32, bm=bn=bk=128, KINNER=8):
+    A tile 64 KiB + B tile 64 KiB + out tile 64 KiB + broadcast 512 KiB
+    well under the ~16 MiB VMEM of a TPU core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG = 1e18
+DEFAULT_BLOCK = 128
+KINNER = 8
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, k_steps: int):
+    """One (i, j, k) grid step: o[i,j] = min(o[i,j], min_k a[i,k]+b[k,j])."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, BIG)
+
+    a = a_ref[...]  # [bm, bk]
+    b = b_ref[...]  # [bk, bn]
+
+    def body(c, acc):
+        # [bm, KINNER, 1] + [1, KINNER, bn] -> reduce min over KINNER.
+        a_chunk = jax.lax.dynamic_slice_in_dim(a, c * KINNER, KINNER, axis=1)
+        b_chunk = jax.lax.dynamic_slice_in_dim(b, c * KINNER, KINNER, axis=0)
+        cand = jnp.min(a_chunk[:, :, None] + b_chunk[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    acc = jnp.full_like(o_ref[...], BIG)
+    acc = jax.lax.fori_loop(0, bk // KINNER, body, acc)
+    o_ref[...] = jnp.minimum(o_ref[...], acc)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def minplus_matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tropical matmul C[i,j] = min_k A[i,k] + B[k,j] via pallas_call.
+
+    Inputs are padded with BIG (the (min,+) identity) to block multiples, so
+    padding never affects the valid region.
+    """
+    (m, k), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    pad_m = (-m) % block
+    pad_k = (-k) % block
+    pad_n = (-n) % block
+    a_p = jnp.pad(a, ((0, pad_m), (0, pad_k)), constant_values=BIG)
+    b_p = jnp.pad(b, ((0, pad_k), (0, pad_n)), constant_values=BIG)
+    mp, kp, np_ = m + pad_m, k + pad_k, n + pad_n
+
+    grid = (mp // block, np_ // block, kp // block)
+    out = pl.pallas_call(
+        functools.partial(_minplus_kernel, bk=block, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, block), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

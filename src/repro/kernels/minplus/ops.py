@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the min-plus kernel.
+
+`use_pallas` selects the Pallas kernel (TPU target; `interpret=True` executes
+the kernel body on CPU for validation). The default pure-jnp path is used by
+the CPU test/bench/dry-run flows; on a real TPU deployment the kernel path is
+enabled by the launcher when V is large enough to matter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import minplus_matmul_pallas
+from .ref import minplus_matmul_ref
+
+BIG = 1e18
+BIG_THRESHOLD = 1e17
+
+
+def minplus_matmul(a, b, *, use_pallas: bool = False, interpret: bool = True):
+    if use_pallas:
+        return minplus_matmul_pallas(a, b, interpret=interpret)
+    return minplus_matmul_ref(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def apsp(w: jax.Array, *, use_pallas: bool = False, interpret: bool = True):
+    """All-pairs shortest-path distances by tropical squaring.
+
+    w: [V, V] nonnegative marginal link weights, BIG on non-edges. The
+    diagonal is forced to 0 (paths may stay put). Returns [V, V] distances
+    (BIG-ish where unreachable).
+    """
+    import math
+
+    n = w.shape[-1]
+    d = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
+    n_iter = max(1, math.ceil(math.log2(max(n - 1, 2))))
+    for _ in range(n_iter):
+        d = jnp.minimum(d, minplus_matmul(d, d, use_pallas=use_pallas, interpret=interpret))
+    return d
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def apsp_with_nexthop(w: jax.Array, *, use_pallas: bool = False, interpret: bool = True):
+    """APSP distances + next-hop table.
+
+    nexthop[i, t] = argmin_j  w[i, j] + dist[j, t]   (j over out-links of i)
+
+    Following next-hops strictly decreases dist[., t], so the induced
+    forwarding is loop-free by construction (used for phi repair/init).
+    """
+    dist = apsp(w, use_pallas=use_pallas, interpret=interpret)
+    # cand[i, j, t] = w[i, j] + dist[j, t]
+    cand = w[:, :, None] + dist[None, :, :]
+    nexthop = jnp.argmin(cand, axis=1).astype(jnp.int32)  # [V, V] -> per target
+    return dist, nexthop

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the tropical (min,+) matmul and APSP.
+
+(A (x) B)[i, j] = min_k A[i, k] + B[k, j]
+
+This is the reference the Pallas kernel is tested against (tests/test_kernels
+sweeps shapes/dtypes with interpret=True).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """[M,K] (x) [K,N] -> [M,N] in fp32. Memory O(M*K*N) — oracle only."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def apsp_ref(w: jax.Array) -> jax.Array:
+    """All-pairs shortest path by repeated tropical squaring of [V,V] weights.
+
+    w must already contain BIG on non-edges and 0 on the diagonal.
+    """
+    n = w.shape[-1]
+    d = w
+    # After ceil(log2(n-1)) squarings, paths of any length are covered.
+    import math
+    n_iter = max(1, math.ceil(math.log2(max(n - 1, 2))))
+    for _ in range(n_iter):
+        d = jnp.minimum(d, minplus_matmul_ref(d, d))
+    return d

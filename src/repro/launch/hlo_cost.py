@@ -1,0 +1,302 @@
+"""Static cost model over optimized (post-SPMD) HLO text.
+
+Why not `compiled.cost_analysis()`: XLA's aggregate counts each while-loop
+body ONCE, so anything under scan-over-layers (i.e. ~everything here) is
+undercounted by a factor of n_layers. This analyzer parses the HLO module
+into computations, costs each op, and scales while bodies by their
+`known_trip_count` backend config — recursively, memoized.
+
+Costed quantities (per device, per step):
+  flops       2 * prod(result_dims) * prod(contracting_dims)  for every dot
+  bytes       sum of operand+result bytes of top-level ops (fusion internals
+              are free — fusions are costed at their boundary, which models
+              DRAM traffic under perfect intra-fusion reuse)
+  collectives result bytes per op kind (all-gather / all-reduce /
+              reduce-scatter / all-to-all / collective-permute)
+
+Validated against the analytic MODEL_FLOPS = 6*N*D in tests/test_dryrun.py.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(r"(?:calls=|to_apply=|body=)(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_OPERAND_RE = re.compile(r"%[\w\.\-]+")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "iota", "partition-id", "replica-id",
+}
+
+
+def _shape_list(type_str):
+    """All (dtype, dims) found in a result-type string (tuples give many)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype = m.group(1)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        out.append((dtype, dims))
+    return out
+
+
+def _nbytes(shapes):
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+class Op:
+    __slots__ = ("name", "kind", "shapes", "operands", "attrs")
+
+    def __init__(self, name, kind, shapes, operands, attrs):
+        self.name = name
+        self.kind = kind
+        self.shapes = shapes
+        self.operands = operands
+        self.attrs = attrs
+
+
+def _parse_rhs(rhs: str):
+    """rhs like 'f32[8,16]{1,0} dot(%a, %b), attrs...' -> (type, kind, ops, attrs)."""
+    i = 0
+    if rhs.startswith("("):
+        depth = 0
+        for j, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    i = j + 1
+                    break
+    type_end = rhs.find(" ", i)
+    if type_end < 0:
+        return rhs, "", "", ""
+    type_str = rhs[:type_end]
+    rest = rhs[type_end + 1 :]
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return type_str, rest.strip().split(" ")[0], "", ""
+    kind = m.group(1)
+    # operand list = up to matching close paren
+    depth = 0
+    start = m.end() - 1
+    end = start
+    for j in range(start, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    operands_str = rest[start + 1 : end]
+    attrs = rest[end + 1 :]
+    return type_str, kind, operands_str, attrs
+
+
+def parse_module(hlo_text: str):
+    """-> (computations: {name: [Op]}, entry_name)."""
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            cur = h.group(2)
+            comps[cur] = []
+            if h.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, rhs = om.group(1), om.group(2)
+        type_str, kind, operands_str, attrs = _parse_rhs(rhs)
+        shapes = _shape_list(type_str)
+        operands = _OPERAND_RE.findall(operands_str)
+        comps[cur].append(Op(name, kind, shapes, operands, attrs))
+    return comps, entry
+
+
+class CostResult(dict):
+    @property
+    def flops(self):
+        return self["flops"]
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {}, "warnings": ["no ENTRY"]}
+
+    shape_tables = {
+        cname: {op.name: op.shapes for op in ops} for cname, ops in comps.items()
+    }
+    memo: dict[str, tuple] = {}
+    warnings: list[str] = []
+
+    def cost(cname: str):
+        if cname in memo:
+            return memo[cname]
+        flops = 0.0
+        nbytes = 0.0
+        coll = defaultdict(float)
+        table = shape_tables.get(cname, {})
+        for op in comps.get(cname, []):
+            # --- nested computations ---
+            if op.kind == "while":
+                trip_m = _TRIP_RE.search(op.attrs)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    warnings.append(f"unknown trip count in {cname}/{op.name}")
+                body = _CALLED_RE.search(op.attrs)
+                condm = _COND_RE.search(op.attrs)
+                if body:
+                    f, b, c = cost(body.group(1))
+                    flops += f * trip
+                    nbytes += b * trip
+                    for k, v in c.items():
+                        coll[k] += v * trip
+                if condm:
+                    f, b, c = cost(condm.group(1))
+                    flops += f * trip
+                continue
+            if op.kind == "conditional":
+                bm = _BRANCHES_RE.search(op.attrs)
+                if bm:
+                    branches = _OPERAND_RE.findall(bm.group(1))
+                    results = [cost(x) for x in branches]
+                    if results:
+                        flops += max(r[0] for r in results)
+                        nbytes += max(r[1] for r in results)
+                        for r in results:
+                            for k, v in r[2].items():
+                                coll[k] += v
+                continue
+            called = _CALLED_RE.search(op.attrs)
+            if called and op.kind in ("fusion", "call", "custom-call", "reduce",
+                                      "reduce-window", "scatter", "sort", "map",
+                                      "select-and-scatter", "all-reduce",
+                                      "reduce-scatter"):
+                f, _, _ = cost(called.group(1))
+                flops += f  # dots inside fusions still count flops
+            # --- op-level cost ---
+            if op.kind == "dot":
+                out_n = 1
+                for _, dims in op.shapes[:1]:
+                    for d in dims:
+                        out_n *= d
+                k = 1
+                cm = _CONTRACT_RE.search(op.attrs)
+                if cm and op.operands:
+                    lhs_shapes = table.get(op.operands[0], [])
+                    if lhs_shapes:
+                        _, lhs_dims = lhs_shapes[0]
+                        for ci in [int(x) for x in cm.group(1).split(",") if x]:
+                            if ci < len(lhs_dims):
+                                k *= lhs_dims[ci]
+                flops += 2.0 * out_n * k
+            if op.kind in COLLECTIVE_KINDS:
+                coll[op.kind] += _nbytes(op.shapes)
+            if op.kind in _FREE_OPS:
+                continue
+            # bytes: result + operands
+            nbytes += _nbytes(op.shapes)
+            for o in op.operands:
+                nbytes += _nbytes(table.get(o, []))
+        memo[cname] = (flops, nbytes, dict(coll))
+        return memo[cname]
+
+    f, b, c = cost(entry)
+    return {"flops": f, "bytes": b, "collectives": c, "warnings": warnings[:10]}
+
+
+def top_dots(hlo_text: str, n: int = 15) -> list[dict]:
+    """The n largest dots by (trip-scaled) FLOPs, with op metadata — the
+    profiler view used by the section-Perf hillclimb to find waste."""
+    comps, entry = parse_module(hlo_text)
+    shape_tables = {
+        cname: {op.name: op.shapes for op in ops} for cname, ops in comps.items()
+    }
+    # computation -> multiplier (trip counts through the call graph)
+    mult: dict[str, float] = {entry: 1.0}
+    changed = True
+    guard = 0
+    while changed and guard < 50:
+        changed = False
+        guard += 1
+        for cname, ops in comps.items():
+            if cname not in mult:
+                continue
+            m = mult[cname]
+            for op in ops:
+                trip = 1.0
+                if op.kind == "while":
+                    t = _TRIP_RE.search(op.attrs)
+                    trip = float(t.group(1)) if t else 1.0
+                for ref in _OPERAND_RE.findall(op.attrs):
+                    if ref in comps:
+                        new = m * (trip if op.kind == "while" else 1.0)
+                        if mult.get(ref, 0.0) < new:
+                            mult[ref] = new
+                            changed = True
+    rows = []
+    meta_re = re.compile(r'op_name="([^"]*)"')
+    for cname, ops in comps.items():
+        table = shape_tables[cname]
+        for op in ops:
+            if op.kind != "dot":
+                continue
+            out_n = 1
+            for _, dims in op.shapes[:1]:
+                for d in dims:
+                    out_n *= d
+            k = 1
+            cm = _CONTRACT_RE.search(op.attrs)
+            if cm and op.operands:
+                lhs = table.get(op.operands[0], [])
+                if lhs:
+                    _, ld = lhs[0]
+                    for ci in [int(x) for x in cm.group(1).split(",") if x]:
+                        if ci < len(ld):
+                            k *= ld[ci]
+            f = 2.0 * out_n * k * mult.get(cname, 1.0)
+            mm = meta_re.search(op.attrs)
+            rows.append(
+                {"flops": f, "comp": cname, "shape": op.shapes[:1],
+                 "meta": mm.group(1) if mm else ""}
+            )
+    rows.sort(key=lambda r: -r["flops"])
+    return rows[:n]

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+
+Production target: TPU v5e pods, 16x16 = 256 chips per pod.
+  single pod:  (data=16, model=16)           — ICI everywhere
+  multi-pod:   (pod=2, data=16, model=16)    — "pod" is the DCN-class axis
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False, model: int = 2):
+    """Tiny mesh for fast iteration on sharding rules (8-16 fake devices)."""
+    n = len(jax.devices())
+    if multi_pod:
+        data = n // (2 * model)
+        return jax.make_mesh((2, data, model), ("pod", "data", "model"))
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

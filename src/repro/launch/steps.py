@@ -1,0 +1,123 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch x shape).
+
+train_step  : fwd loss -> grads -> AdamW (optionally grad-accumulated over
+              microbatches — an activation-memory lever for the hillclimb)
+prefill_step: full-prompt forward building the KV caches + last logits
+serve_step  : one-token decode against a seq_len KV cache
+
+All are pure functions of explicit state — jit/lower-able with ShapeDtype
+stand-ins (the dry-run never allocates real parameters)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import config as C
+from ..models import model as M
+from ..optim import adamw_update, clip_by_global_norm
+from ..models.config import ModelConfig, ShapeConfig
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; shardable, no allocation)
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {
+                "feats": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16),
+                "dec_tokens": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.frontend != "none":
+            return {
+                "feats": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token; the KV cache of seq_len is separate state.
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def param_specs(cfg: ModelConfig):
+    return M.param_specs(cfg)
+
+
+def opt_specs(cfg: ModelConfig):
+    p = M.param_specs(cfg)
+    zeros = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), p)
+    return {
+        "mu": zeros,
+        "nu": zeros,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4, grad_clip: float = 1.0,
+                    microbatches: int = 1):
+    def loss_of(params, batch):
+        return M.loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def slice_mb(i, t):
+                mb = t.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(t, i * mb, mb, axis=0)
+
+            def body(carry, i):
+                acc, = carry
+                mb_batch = jax.tree.map(lambda t: slice_mb(i, t), batch)
+                l, g = jax.value_and_grad(loss_of)(params, mb_batch)
+                acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), acc, g)
+                return (acc,), l
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum,), losses = jax.lax.scan(
+                body, (zero,), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr)
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, total_len: int):
+    def prefill_step(params, batch):
+        caches, logits = M.prefill(cfg, params, batch, total_len)
+        return caches, logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, caches, token, pos):
+        logits, new_caches = M.decode_step(cfg, params, caches, token, pos)
+        return logits, new_caches
+
+    return serve_step
+
+
+def serve_config(cfg: ModelConfig) -> ModelConfig:
+    """Serving stores parameters in bf16 (no fp32 master needed)."""
+    return dataclasses.replace(cfg, param_dtype="bfloat16", remat=False)

@@ -1,0 +1,12 @@
+from .config import SHAPES, ModelConfig, ShapeConfig, shape_applicable  # noqa: F401
+from .model import (  # noqa: F401
+    decode_step,
+    encode,
+    forward,
+    init_caches,
+    init_params,
+    logits_fn,
+    loss_fn,
+    param_specs,
+    prefill,
+)

@@ -1,0 +1,410 @@
+"""Layer primitives shared by all architecture families.
+
+Pure functions over param pytrees (no framework dependency). Parameter
+layout conventions (per layer, pre-stacking):
+
+  attn:  wq [d, H, hd]   wk/wv [d, Kv, hd]   wo [H, hd, d]  (+ optional biases)
+  mlp:   wi [d, ff] (+ wg [d, ff] for GLU)   wo [ff, d]
+  moe:   router [d, E]   wi_e [E, d, ff] (+ wg_e)   wo_e [E, ff, d]
+  norm:  scale [d]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention import flash_attention
+from ..distributed.act import shard
+from .config import ModelConfig
+from .quant import dequantize_leaf, is_quantized_leaf
+
+Params = dict
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norm
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_norm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta):
+    """x: [B, S, H, hd], positions: [S] or [B, S] absolute token positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # [half]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # [S, half]
+        ang = ang[None, :, None, :]  # [1, S, 1, half]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pd = dtype_of(cfg.param_dtype)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), pd),
+        "wk": _dense_init(ks[1], (d, kv, hd), pd),
+        "wv": _dense_init(ks[2], (d, kv, hd), pd),
+        "wo": _dense_init(ks[3], (h, hd, d), pd, scale=1.0 / math.sqrt(h * hd * 2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return shard(q, "heads"), shard(k, "heads"), shard(v, "heads")
+
+
+def attention_full(p, x, cfg: ModelConfig, *, causal: bool = True, positions=None):
+    """Full-sequence attention (training / prefill). x: [B, S, d]."""
+    b, s, _ = x.shape
+    cd = dtype_of(cfg.compute_dtype)
+    q, k, v = _qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    # [B, S, H, hd] -> [B, H, S, hd]
+    qt, kt, vt = (shard(t.transpose(0, 2, 1, 3), "heads_t") for t in (q, k, v))
+    o = flash_attention(
+        qt,
+        kt,
+        vt,
+        causal=causal,
+        window=cfg.sliding_window,
+        use_pallas=cfg.use_pallas_attention,
+    )
+    o = shard(o, "heads_t").transpose(0, 2, 1, 3)  # [B, S, H, hd]
+    return shard(jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd)), "residual")
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """KV ring-buffer length: bounded by the sliding window when present."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    c = cache_len(cfg, seq_len)
+    cd = dtype_of(cfg.compute_dtype)
+    shape = (batch, cfg.n_kv_heads, c, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd)}
+
+
+def prefill_cache(p, x, cfg: ModelConfig, seq_len_total: int):
+    """Compute the attention output AND the ring cache left by a prefill.
+
+    For ring slot i (cache length C, prefill length S): the slot holds the
+    key of absolute position t_i = S-1 - ((S-1-i) mod C), matching the
+    decode-time write rule slot(t) = t mod C.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    positions = jnp.arange(s)
+    k_rot = rope(k, positions, cfg.rope_theta)
+    c = cache_len(cfg, seq_len_total)
+    slot = jnp.arange(c)
+    # Slots not yet written (t_i < 0, possible when prefill < cache length)
+    # hold clipped-stale data; decode masks them out via abs_pos >= 0.
+    t_i = (s - 1) - ((s - 1 - slot) % c)
+    kc = jnp.take(k_rot, t_i, axis=1, mode="clip").transpose(0, 2, 1, 3)
+    vc = jnp.take(v, t_i, axis=1, mode="clip").transpose(0, 2, 1, 3)
+    return {"k": kc, "v": vc}
+
+
+def attention_decode(p, x, cache, pos, cfg: ModelConfig):
+    """One-token decode. x: [B, 1, d]; cache k/v: [B, Kv, C, hd]; pos scalar.
+
+    The cache is a ring buffer (slot = pos mod C); RoPE is applied at write
+    time with absolute positions, and masking reconstructs each slot's
+    absolute position as  abs_i = pos - ((pos - i) mod C).
+    """
+    b = x.shape[0]
+    cd = dtype_of(cfg.compute_dtype)
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = h // kv
+    q, k, v = _qkv(p, x, cfg)  # [B, 1, *, hd]
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, pos_arr, cfg.rope_theta)
+    k = rope(k, pos_arr, cfg.rope_theta)
+
+    c = cache["k"].shape[2]
+    slot = jnp.mod(pos, c)
+    kc = jax.lax.dynamic_update_slice(
+        cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype), (0, 0, slot, 0)
+    )
+    vc = jax.lax.dynamic_update_slice(
+        cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype), (0, 0, slot, 0)
+    )
+    kc = shard(kc, "kv_cache")
+    vc = shard(vc, "kv_cache")
+
+    idx = jnp.arange(c)
+    abs_pos = pos - jnp.mod(pos - idx, c)  # in [pos - C + 1, pos]
+    valid = abs_pos >= 0
+    if cfg.sliding_window is not None:
+        valid &= abs_pos > pos - cfg.sliding_window
+
+    qg = q.reshape(b, kv, group, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bkcd->bkgc", qg, kc.astype(jnp.float32))
+    scores = shard(scores / math.sqrt(hd), "decode_scores")
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    # Distributed softmax over the seq-sharded cache (flash-decoding style):
+    # GSPMD turns the max/sum reductions into tiny all-reduces.
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgc,bkcd->bkgd", w, vc.astype(jnp.float32)).astype(cd)
+    o = o.reshape(b, 1, h, hd)
+    out = shard(jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd)), "residual")
+    return out, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+def _act(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "geglu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def is_glu(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": _dense_init(ks[0], (d, ff), pd),
+        "wo": _dense_init(ks[1], (ff, d), pd, scale=1.0 / math.sqrt(ff * 2 * cfg.n_layers)),
+    }
+    if is_glu(cfg.mlp_act):
+        p["wg"] = _dense_init(ks[2], (d, ff), pd)
+    return p
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    act = _act(cfg.mlp_act)
+    h = shard(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(cd)), "ffn")
+    if is_glu(cfg.mlp_act):
+        g = shard(jnp.einsum("bsd,df->bsf", x, p["wg"].astype(cd)), "ffn")
+        h = act(g) * h
+    else:
+        h = act(h)
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(cd)), "residual")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch, capacity-dropped, GShard-style)
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(ks[0], (d, e), pd, scale=0.02),
+        "wi_e": _dense_init(ks[1], (e, d, ff), pd, scale=1.0 / math.sqrt(d)),
+        "wo_e": _dense_init(ks[2], (e, ff, d), pd, scale=1.0 / math.sqrt(ff * 2 * cfg.n_layers)),
+    }
+    if is_glu(cfg.mlp_act):
+        p["wg_e"] = _dense_init(ks[3], (e, d, ff), pd, scale=1.0 / math.sqrt(d))
+    if cfg.shared_d_ff:
+        sub = dataclasses.replace(cfg, d_ff=cfg.shared_d_ff)
+        p["shared"] = init_mlp(ks[4], sub, d_ff=cfg.shared_d_ff)
+        p["shared_gate"] = _dense_init(ks[5], (d, 1), pd, scale=0.02)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    return max(4, math.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+
+def _moe_dispatch_combine(p, xf, cfg: ModelConfig, cap: int):
+    """One dispatch group: xf [T, d] -> [T, d].
+
+    Sort-based dispatch into per-expert capacity buffers (overflow dropped),
+    batched expert GEMMs, weighted combine. Router softmax over the selected
+    top-k (Mixtral convention)."""
+    cd = dtype_of(cfg.compute_dtype)
+    e, k = cfg.n_experts, cfg.top_k
+    t, d = xf.shape
+
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(cd)).astype(jnp.float32)
+    top_logits, top_idx = jax.lax.top_k(logits, k)  # [T, k]
+    top_w = jax.nn.softmax(top_logits, axis=-1)
+
+    flat_e = top_idx.reshape(t * k)
+    flat_w = top_w.reshape(t * k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first_of_group = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(t * k) - first_of_group
+    keep = pos_in_e < cap
+    buf_idx = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # drop slot
+    token_of = order // k
+
+    xbuf = jnp.zeros((e * cap, d), cd).at[buf_idx].set(
+        xf[token_of].astype(cd), mode="drop"
+    )
+    xbuf = xbuf.reshape(e, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", xbuf, p["wi_e"].astype(cd))
+    act = _act(cfg.mlp_act)
+    if "wg_e" in p:
+        g = jnp.einsum("ecd,edf->ecf", xbuf, p["wg_e"].astype(cd))
+        h = act(g) * h
+    else:
+        h = act(h)
+    ybuf = jnp.einsum("ecf,efd->ecd", h, p["wo_e"].astype(cd)).reshape(e * cap, d)
+
+    gathered = jnp.take(ybuf, jnp.minimum(buf_idx, e * cap - 1), axis=0)
+    contrib = gathered * (flat_w[order] * keep).astype(cd)[:, None]
+    return jnp.zeros((t, d), cd).at[token_of].add(contrib)
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: [B, S, d] -> [B, S, d].
+
+    Dispatch is performed per GROUP (cfg.moe_groups, set by the launcher to
+    the number of data shards): each group routes its own tokens into its own
+    capacity buffers, so under SPMD every data shard dispatches locally and
+    the expert GEMMs carry a leading group dim sharded over data — without
+    this, buffers whose expert dim doesn't divide the model axis (Mixtral:
+    E=8 on a 16-way axis) were replicated onto every device, inflating
+    per-device FLOPs ~50x (section Perf iteration 1)."""
+    b, s, d = x.shape
+    t = b * s
+    groups = max(1, cfg.moe_groups)
+    if t % groups != 0:
+        groups = 1
+    tg = t // groups
+    cap = moe_capacity(cfg, tg)
+    xg = shard(x.reshape(groups, tg, d), "moe_groups")
+    out = jax.vmap(lambda xf: _moe_dispatch_combine(p, xf, cfg, cap))(xg)
+    out = shard(out, "moe_groups").reshape(t, d)
+
+    if "shared" in p:
+        cd = dtype_of(cfg.compute_dtype)
+        xf = x.reshape(t, d)
+        gate = jax.nn.sigmoid(
+            jnp.einsum("td,do->to", xf, p["shared_gate"].astype(cd)).astype(jnp.float32)
+        ).astype(cd)
+        shared = mlp_apply(p["shared"], x, dataclasses.replace(cfg, d_ff=cfg.shared_d_ff))
+        out = out + (gate * shared.reshape(t, d))
+
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig) -> Params:
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"embed": _dense_init(ks[0], (cfg.vocab, cfg.d_model), pd, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(ks[1], (cfg.d_model, cfg.vocab), pd)
+    if cfg.frontend != "none":
+        p["frontend_proj"] = _dense_init(ks[2], (cfg.frontend_dim, cfg.d_model), pd)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    table = p["embed"]
+    if is_quantized_leaf(table):
+        # Gather int8 rows, dequantize only the gathered slice.
+        rows = jnp.take(table["__q"], tokens, axis=0).astype(jnp.float32)
+        x = (rows * table["__s"]).astype(cd)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+        return shard(x, "residual")
+    x = jnp.take(table.astype(cd), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    return shard(x, "residual")
+
+
+def embed_frontend(p, feats, cfg: ModelConfig):
+    """Stub modality frontend: precomputed patch/frame embeddings -> d."""
+    cd = dtype_of(cfg.compute_dtype)
+    w = p["frontend_proj"]
+    if is_quantized_leaf(w):
+        w = dequantize_leaf(w, cd)
+    return shard(
+        jnp.einsum("bsf,fd->bsd", feats.astype(cd), w.astype(cd)),
+        "residual",
+    )
+
+
+def unembed(p, x, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    w = p["embed"] if cfg.tie_embeddings else p["lm_head"]
+    if is_quantized_leaf(w):
+        w = dequantize_leaf(w, cd)
+    else:
+        w = w.astype(cd)
+    if cfg.tie_embeddings:
+        w = w.T
+    return shard(jnp.einsum("bsd,dv->bsv", x, w), "logits")

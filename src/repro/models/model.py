@@ -1,0 +1,438 @@
+"""Model assembly: family-specific blocks, scan-over-layers stacks, and the
+public forward / loss / prefill / decode entry points.
+
+Everything is a pure function of (cfg, params, batch); params are plain dict
+pytrees with per-layer leaves stacked on axis 0 (scan-over-layers keeps HLO
+size and compile time flat in depth — essential for the 80-cell dry-run).
+
+Batch formats:
+  LM families      {"tokens": int32 [B, S]}
+  frontend archs   {"feats": [B, S, frontend_dim], "labels": int32 [B, S]}
+  encdec           {"feats"|"tokens": encoder input, "dec_tokens": [B, S]}
+Decode:
+  {"token": int32 [B, 1]} + per-layer caches + scalar position.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as S
+from .config import ModelConfig
+from .quant import dequantize_params, is_quantized_leaf, quantize_params
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# per-family block init
+# ---------------------------------------------------------------------------
+def _init_block(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind == "dense":
+        p = {"norm1": L.init_norm(d), "attn": L.init_attention(ks[0], cfg)}
+        if cfg.parallel_block:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        else:
+            p["norm2"] = L.init_norm(d)
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+        return p
+    if kind == "moe":
+        return {
+            "norm1": L.init_norm(d),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm2": L.init_norm(d),
+            "moe": L.init_moe(ks[1], cfg),
+        }
+    if kind == "ssm":
+        return {"norm1": L.init_norm(d), "ssm": S.init_ssm(ks[0], cfg)}
+    if kind == "hybrid":
+        return {
+            "norm1": L.init_norm(d),
+            "attn": L.init_attention(ks[0], cfg),
+            "ssm": S.init_ssm(ks[1], cfg),
+            "norm_attn_out": L.init_norm(d),
+            "norm_ssm_out": L.init_norm(d),
+            "norm2": L.init_norm(d),
+            "mlp": L.init_mlp(ks[2], cfg),
+        }
+    if kind == "enc":
+        return {
+            "norm1": L.init_norm(d),
+            "attn": L.init_attention(ks[0], cfg),
+            "norm2": L.init_norm(d),
+            "mlp": L.init_mlp(ks[1], cfg),
+        }
+    if kind == "dec":
+        return {
+            "norm1": L.init_norm(d),
+            "self_attn": L.init_attention(ks[0], cfg),
+            "norm_cross": L.init_norm(d),
+            "cross_attn": L.init_attention(ks[1], cfg),
+            "norm2": L.init_norm(d),
+            "mlp": L.init_mlp(ks[2], cfg),
+        }
+    raise ValueError(kind)
+
+
+def _block_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "moe": "moe", "ssm": "ssm", "hybrid": "hybrid"}[
+        cfg.family
+    ] if cfg.family != "encdec" else "enc"
+
+
+# ---------------------------------------------------------------------------
+# cross attention (no RoPE, bidirectional over memory)
+# ---------------------------------------------------------------------------
+def _cross_attention(p, x, mem_k, mem_v, cfg: ModelConfig):
+    """x: [B, S, d]; mem_k/mem_v: [B, Kv, Sm, hd] precomputed from memory."""
+    b, s, _ = x.shape
+    cd = L.dtype_of(cfg.compute_dtype)
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+    qt = q.transpose(0, 2, 1, 3)
+    from ..kernels.flash_attention import flash_attention
+
+    o = flash_attention(
+        qt, mem_k, mem_v, causal=False, use_pallas=cfg.use_pallas_attention
+    )
+    o = o.transpose(0, 2, 1, 3)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+
+
+def _cross_kv(p, memory, cfg: ModelConfig):
+    cd = L.dtype_of(cfg.compute_dtype)
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"].astype(cd))
+    if "bk" in p:
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence block application (train / prefill)
+# ---------------------------------------------------------------------------
+def _block_full(p, x, cfg: ModelConfig, kind: str, *, causal=True, memory=None,
+                want_cache=False, total_len=0):
+    cache = {}
+    if kind in ("dense", "enc"):
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out = L.attention_full(p["attn"], h, cfg, causal=causal)
+        if want_cache:
+            cache["attn"] = L.prefill_cache(p["attn"], h, cfg, total_len)
+        if cfg.parallel_block:
+            x = x + attn_out + L.mlp_apply(p["mlp"], h, cfg)
+        else:
+            x = x + attn_out
+            x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, cache
+    if kind == "moe":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        if want_cache:
+            cache["attn"] = L.prefill_cache(p["attn"], h, cfg, total_len)
+        x = x + L.attention_full(p["attn"], h, cfg, causal=causal)
+        x = x + L.moe_apply(p["moe"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, cache
+    if kind == "ssm":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, final_state = S.ssm_apply(p["ssm"], h, cfg)
+        if want_cache:
+            cache["ssm"] = _ssm_prefill_cache(p["ssm"], h, cfg, final_state)
+        return x + y, cache
+    if kind == "hybrid":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out = L.attention_full(p["attn"], h, cfg, causal=causal)
+        ssm_out, final_state = S.ssm_apply(p["ssm"], h, cfg)
+        if want_cache:
+            cache["attn"] = L.prefill_cache(p["attn"], h, cfg, total_len)
+            cache["ssm"] = _ssm_prefill_cache(p["ssm"], h, cfg, final_state)
+        mixed = 0.5 * (
+            L.rmsnorm(attn_out, p["norm_attn_out"], cfg.norm_eps)
+            + L.rmsnorm(ssm_out, p["norm_ssm_out"], cfg.norm_eps)
+        )
+        x = x + mixed
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, cache
+    if kind == "dec":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        if want_cache:
+            cache["attn"] = L.prefill_cache(p["self_attn"], h, cfg, total_len)
+        x = x + L.attention_full(p["self_attn"], h, cfg, causal=True)
+        hc = L.rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        mem_k, mem_v = _cross_kv(p["cross_attn"], memory, cfg)
+        if want_cache:
+            cache["cross_k"] = mem_k
+            cache["cross_v"] = mem_v
+        x = x + _cross_attention(p["cross_attn"], hc, mem_k, mem_v, cfg)
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, cache
+    raise ValueError(kind)
+
+
+def _ssm_prefill_cache(p_ssm, h, cfg: ModelConfig, final_state):
+    """Conv tail (last conv_width-1 pre-conv channels) + final SSD state."""
+    cd = L.dtype_of(cfg.compute_dtype)
+    din, n = cfg.ssm_d_inner, cfg.ssm_state
+    zxbcdt = jnp.einsum("bld,dk->blk", h, p_ssm["in_proj"].astype(cd))
+    _, xs, b_in, c_in, _ = S._split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    tail = conv_in[:, -(cfg.conv_width - 1):, :]
+    return {"state": final_state, "conv": tail}
+
+
+# ---------------------------------------------------------------------------
+# decode block application
+# ---------------------------------------------------------------------------
+def _block_decode(p, x, cache, pos, cfg: ModelConfig, kind: str):
+    new_cache = {}
+    if kind in ("dense", "moe"):
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out, new_attn = L.attention_decode(p["attn"], h, cache["attn"], pos, cfg)
+        new_cache["attn"] = new_attn
+        if kind == "dense" and cfg.parallel_block:
+            x = x + attn_out + L.mlp_apply(p["mlp"], h, cfg)
+        elif kind == "dense":
+            x = x + attn_out
+            x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        else:
+            x = x + attn_out
+            x = x + L.moe_apply(p["moe"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, new_cache
+    if kind == "ssm":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        y, new_ssm = S.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = new_ssm
+        return x + y, new_cache
+    if kind == "hybrid":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out, new_attn = L.attention_decode(p["attn"], h, cache["attn"], pos, cfg)
+        ssm_out, new_ssm = S.ssm_decode(p["ssm"], h, cache["ssm"], cfg)
+        new_cache["attn"] = new_attn
+        new_cache["ssm"] = new_ssm
+        mixed = 0.5 * (
+            L.rmsnorm(attn_out, p["norm_attn_out"], cfg.norm_eps)
+            + L.rmsnorm(ssm_out, p["norm_ssm_out"], cfg.norm_eps)
+        )
+        x = x + mixed
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, new_cache
+    if kind == "dec":
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out, new_attn = L.attention_decode(
+            p["self_attn"], h, cache["attn"], pos, cfg
+        )
+        new_cache["attn"] = new_attn
+        x = x + attn_out
+        hc = L.rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        x = x + _cross_attention(p["cross_attn"], hc, cache["cross_k"], cache["cross_v"], cfg)
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+        x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["norm2"], cfg.norm_eps), cfg)
+        return x, new_cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stacks (scan over layers)
+# ---------------------------------------------------------------------------
+def _stack_full(blocks, x, cfg: ModelConfig, kind: str, *, causal=True,
+                memory=None, want_cache=False, total_len=0, remat=None):
+    remat = cfg.remat if remat is None else remat
+
+    def body(xc, p_layer):
+        p_layer = dequantize_params(p_layer, L.dtype_of(cfg.compute_dtype))
+        out, cache = _block_full(
+            p_layer, xc, cfg, kind, causal=causal, memory=memory,
+            want_cache=want_cache, total_len=total_len,
+        )
+        return out, (cache if want_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, blocks)
+    return x, caches
+
+
+def _stack_decode(blocks, caches, x, pos, cfg: ModelConfig, kind: str):
+    def body(xc, inp):
+        p_layer, cache_layer = inp
+        p_layer = dequantize_params(p_layer, L.dtype_of(cfg.compute_dtype))
+        out, new_cache = _block_decode(p_layer, xc, cache_layer, pos, cfg, kind)
+        return out, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (blocks, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, rng) -> Params:
+    k_embed, k_blocks, k_dec, k_norm = jax.random.split(rng, 4)
+    params = {"embed": L.init_embed(k_embed, cfg), "final_norm": L.init_norm(cfg.d_model)}
+    kind = _block_kind(cfg)
+    layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params["blocks"] = jax.vmap(lambda k: _init_block(k, cfg, kind))(layer_keys)
+    if cfg.family == "encdec":
+        dec_keys = jax.random.split(k_dec, cfg.n_dec_layers)
+        params["dec_blocks"] = jax.vmap(lambda k: _init_block(k, cfg, "dec"))(dec_keys)
+        params["enc_final_norm"] = L.init_norm(cfg.d_model)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Shape/dtype tree without allocating (for the dry-run)."""
+    def build():
+        p = init_params(cfg, jax.random.PRNGKey(0))
+        if cfg.quantize_int8:
+            p = quantize_params(p)
+        return p
+
+    return jax.eval_shape(build)
+
+
+def _embed_input(cfg: ModelConfig, params, batch):
+    if cfg.frontend != "none":
+        return L.embed_frontend(params["embed"], batch["feats"], cfg)
+    return L.embed_tokens(params["embed"], batch["tokens"], cfg)
+
+
+def encode(cfg: ModelConfig, params, batch):
+    """Encoder stack (encdec family): bidirectional attention."""
+    x = _embed_input(cfg, params, batch)
+    x, _ = _stack_full(params["blocks"], x, cfg, "enc", causal=False)
+    return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """Full-sequence forward -> final hidden states [B, S, d]."""
+    if cfg.family == "encdec":
+        memory = encode(cfg, params, batch)
+        y = L.embed_tokens(params["embed"], batch["dec_tokens"], cfg)
+        y, _ = _stack_full(params["dec_blocks"], y, cfg, "dec", memory=memory)
+        return L.rmsnorm(y, params["final_norm"], cfg.norm_eps)
+    x = _embed_input(cfg, params, batch)
+    kind = _block_kind(cfg)
+    x, _ = _stack_full(params["blocks"], x, cfg, kind, causal=True)
+    return L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(cfg: ModelConfig, params, batch):
+    return L.unembed(params["embed"], forward(cfg, params, batch), cfg)
+
+
+def _targets(cfg: ModelConfig, batch):
+    if cfg.family == "encdec":
+        tok = batch["dec_tokens"]
+        return tok[:, 1:], None
+    if cfg.frontend != "none":
+        return batch["labels"][:, 1:], None
+    return batch["tokens"][:, 1:], None
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Mean next-token cross entropy (fp32 logsumexp, optional vocab
+    chunking — a memory/perf knob for the huge-vocab archs)."""
+    h = forward(cfg, params, batch)[:, :-1]
+    targets, _ = _targets(cfg, batch)
+    embed = params["embed"]
+    if cfg.vocab_chunking:
+        return _chunked_ce(cfg, embed, h, targets)
+    logits = L.unembed(embed, h, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tl = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tl)
+
+
+def _chunked_ce(cfg: ModelConfig, embed, h, targets):
+    """Cross entropy without materializing [B, S, V] logits: streams over
+    vocab chunks keeping a running logsumexp + the target logit."""
+    v = cfg.vocab
+    nch = cfg.vocab_chunking
+    csize = math.ceil(v / nch)
+    w = embed["embed"].T if cfg.tie_embeddings else embed["lm_head"]
+    cd = L.dtype_of(cfg.compute_dtype)
+    b, s, d = h.shape
+    lse = jnp.full((b, s), -jnp.inf, jnp.float32)
+    tl = jnp.zeros((b, s), jnp.float32)
+    for c in range(nch):
+        lo = c * csize
+        hi = min(v, lo + csize)
+        logits_c = jnp.einsum("bsd,dv->bsv", h, w[:, lo:hi].astype(cd)).astype(jnp.float32)
+        lse = jnp.logaddexp(lse, jax.nn.logsumexp(logits_c, axis=-1))
+        in_chunk = (targets >= lo) & (targets < hi)
+        idx = jnp.clip(targets - lo, 0, hi - lo - 1)
+        got = jnp.take_along_axis(logits_c, idx[..., None], axis=-1)[..., 0]
+        tl = tl + jnp.where(in_chunk, got, 0.0)
+    return jnp.mean(lse - tl)
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode
+# ---------------------------------------------------------------------------
+def prefill(cfg: ModelConfig, params, batch, total_len: int):
+    """Run the full prompt, returning (caches, last-position logits)."""
+    if cfg.family == "encdec":
+        memory = encode(cfg, params, batch)
+        y = L.embed_tokens(params["embed"], batch["dec_tokens"], cfg)
+        y, caches = _stack_full(
+            params["dec_blocks"], y, cfg, "dec", memory=memory,
+            want_cache=True, total_len=total_len, remat=False,
+        )
+        y = L.rmsnorm(y, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], y[:, -1:], cfg)
+        return caches, logits
+    x = _embed_input(cfg, params, batch)
+    kind = _block_kind(cfg)
+    x, caches = _stack_full(
+        params["blocks"], x, cfg, kind, causal=True,
+        want_cache=True, total_len=total_len, remat=False,
+    )
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)
+    return caches, logits
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    """Zero caches for decode-from-scratch (the dry-run decode cells)."""
+    kind = _block_kind(cfg) if cfg.family != "encdec" else "dec"
+    n_layers = cfg.n_dec_layers if cfg.family == "encdec" else cfg.n_layers
+
+    def one_layer(_):
+        c = {}
+        if kind in ("dense", "moe", "hybrid", "dec"):
+            c["attn"] = L.init_cache(cfg, batch, seq_len)
+        if kind in ("ssm", "hybrid"):
+            c["ssm"] = S.init_ssm_cache(cfg, batch)
+        if kind == "dec":
+            cd = L.dtype_of(cfg.compute_dtype)
+            shape = (batch, cfg.n_kv_heads, seq_len, cfg.head_dim)
+            c["cross_k"] = jnp.zeros(shape, cd)
+            c["cross_v"] = jnp.zeros(shape, cd)
+        return c
+
+    return jax.vmap(one_layer)(jnp.arange(n_layers))
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, pos):
+    """One decode step. token: [B, 1] int32; pos: scalar int32.
+
+    Returns (logits [B, 1, vocab], new caches)."""
+    x = L.embed_tokens(params["embed"], token, cfg)
+    if cfg.family == "encdec":
+        x, new_caches = _stack_decode(params["dec_blocks"], caches, x, pos, cfg, "dec")
+    else:
+        kind = _block_kind(cfg)
+        x, new_caches = _stack_decode(params["blocks"], caches, x, pos, cfg, kind)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg), new_caches

@@ -1,0 +1,221 @@
+"""Mamba-2 / SSD (state-space duality) mixer, arXiv:2405.21060.
+
+Training/prefill uses the chunked dual form: intra-chunk (quadratic,
+attention-like) + inter-chunk state passing (linear recurrence over chunk
+boundaries) — O(L) memory in sequence length, constant-size decode state.
+Decode is the plain SSM recurrence:
+
+    h <- exp(dt*A) h + dt * B x ,   y = C h + D x
+
+Layout: d_inner = expand * d_model, heads of size ssm_head_dim, one B/C group
+(ngroups=1), scalar A per head. Gated RMSNorm before out-projection.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.act import shard
+from .config import ModelConfig
+from .layers import _dense_init, dtype_of, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    din = cfg.ssm_d_inner
+    n = cfg.ssm_state
+    nh = cfg.ssm_heads
+    cw = cfg.conv_width
+    conv_dim = din + 2 * n
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * din + 2 * n + nh), pd),
+        "conv_w": _dense_init(ks[1], (cw, conv_dim), pd, scale=1.0 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(A_log) in [-16, -1]
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "ssm_norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": _dense_init(
+            ks[4], (din, d), pd, scale=1.0 / math.sqrt(din * 2 * cfg.n_layers)
+        ),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    din, n, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :din]
+    xs = zxbcdt[..., din : 2 * din]
+    b_in = zxbcdt[..., 2 * din : 2 * din + n]
+    c_in = zxbcdt[..., 2 * din + n : 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n :]
+    return z, xs, b_in, c_in, dt
+
+
+def _causal_conv(x, w, bias, conv_state=None):
+    """Depthwise causal conv. x: [B, L, C], w: [K, C]. Returns (y, new_state)
+    where state is the last K-1 inputs (for streaming decode)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, L+K-1, C]
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    y = y + bias[None, None, :]
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(x):
+    """[..., q] -> [..., q, q]: T[i, j] = sum_{k=j+1..i} x[k], -inf above diag."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    t = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, t, NEG_INF)
+
+
+def ssd_chunked(xs, dt, A, B, C, chunk, init_state=None):
+    """SSD dual form.
+
+    xs: [b, l, h, p]  dt: [b, l, h]  A: [h]  B, C: [b, l, n]
+    Returns (y [b, l, h, p], final_state [b, h, p, n]).
+    """
+    b, l, h, p = xs.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+    q = chunk
+
+    xb = xs.reshape(b, nc, q, h, p)
+    dtb = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bb = B.reshape(b, nc, q, n)
+    Cb = C.reshape(b, nc, q, n)
+
+    dA = dtb * A[None, None, None, :]  # [b, nc, q, h] (negative)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1) intra-chunk (diagonal blocks).
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))  # [b, nc, h, q, q]
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cb.astype(jnp.float32), Bb.astype(jnp.float32))
+    M = Lmat * scores[:, :, None, :, :] * jnp.moveaxis(dtb, -1, -2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", M, xb.astype(jnp.float32))
+
+    # 2) per-chunk input -> end-of-chunk state.
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # [b, nc, q, h]
+    states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn",
+        Bb.astype(jnp.float32),
+        decay_states * dtb,
+        xb.astype(jnp.float32),
+    )
+
+    # 3) inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # [b, nc, h]
+
+    def step(carry, inp):
+        s_in, (cd, st) = carry, inp
+        s_out = cd[:, :, None, None] * s_in + st
+        return s_out, s_in  # emit the state BEFORE this chunk
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init_state.astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [b, nc, h, p, n]
+
+    # 4) contribution of the carried-in state to each position.
+    state_decay_out = jnp.exp(dA_cs)  # [b, nc, q, h]
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cb.astype(jnp.float32), prev_states, state_decay_out
+    )
+
+    y = (y_diag + y_off).reshape(b, lp, h, p)[:, :l]
+    return y, final_state
+
+
+def ssm_apply(p, x, cfg: ModelConfig, init_state=None):
+    """Full-sequence SSD mixer. x: [B, L, d] -> ([B, L, d], final_state)."""
+    cd = dtype_of(cfg.compute_dtype)
+    b, l, _ = x.shape
+    din, n, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = shard(jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(cd)), "ssm_inner")
+    z, xs, b_in, c_in, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs = conv_out[..., :din]
+    b_in = conv_out[..., din : din + n]
+    c_in = conv_out[..., din + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(b, l, nh, hp)
+    y, final_state = ssd_chunked(xh, dt, A, b_in, c_in, cfg.ssm_chunk, init_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, l, din).astype(cd)
+
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = shard(jnp.einsum("blk,kd->bld", y, p["out_proj"].astype(cd)), "residual")
+    return out, final_state
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    nh, hp, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, nh, hp, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype_of(cfg.compute_dtype)),
+    }
+
+
+def ssm_decode(p, x, cache, cfg: ModelConfig):
+    """One-token recurrent step. x: [B, 1, d]."""
+    cd = dtype_of(cfg.compute_dtype)
+    b = x.shape[0]
+    din, n, nh, hp = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(cd))
+    z, xs, b_in, c_in, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)  # [B, 1, conv_dim]
+    conv_out, new_conv = _causal_conv(
+        conv_in, p["conv_w"].astype(cd), p["conv_b"].astype(cd), conv_state=cache["conv"]
+    )
+    xs = conv_out[..., :din]
+    b_in = conv_out[..., din : din + n]
+    c_in = conv_out[..., din + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])[:, 0]  # [B, nh]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # [B, nh]
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    Bv = b_in[:, 0].astype(jnp.float32)  # [B, n]
+    Cv = c_in[:, 0].astype(jnp.float32)
+
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", Bv, dt, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cv, state) + p["D"][None, :, None] * xh
+    y = y.reshape(b, 1, din).astype(cd)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"].astype(cd))
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,62 @@
+"""Minimal-dependency AdamW (+ global-norm clipping, cosine schedule).
+
+Optimizer state is a pytree congruent with params (fp32 moments); sharding
+rules map it with the same specs as the parameters (ZeRO-style: the moments
+live wherever the FSDP/TP shards of the parameter live)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros, "nu": jax.tree.map(jnp.copy, zeros), "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(
+    grads,
+    state,
+    params,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**sf
+    bc2 = 1.0 - b2**sf
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32)
+        mu_n = b1 * mu + (1 - b1) * gf
+        nu_n = b2 * nu + (1 - b2) * jnp.square(gf)
+        mhat = mu_n / bc1
+        vhat = nu_n / bc2
+        pf = p.astype(jnp.float32)
+        new_p = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return new_p.astype(p.dtype), mu_n, nu_n
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    sf = step.astype(jnp.float32)
+    warm = peak_lr * sf / max(warmup, 1)
+    prog = jnp.clip((sf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

@@ -1,0 +1,28 @@
+"""int8 gradient compression with error feedback, for the cross-pod (DCN)
+all-reduce. DCN bandwidth between pods is ~10x scarcer than ICI; quantizing
+the pod-level gradient exchange 4x (fp32->int8) with error feedback keeps
+convergence while shrinking the dominant multi-pod collective.
+
+Used by launch/train.py when `--grad-compression int8` is set; the error
+accumulator is part of the training state (and thus checkpointed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array, error: jax.Array | None = None):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale, new_error)."""
+    xf = x.astype(jnp.float32)
+    if error is not None:
+        xf = xf + error
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    recon = q.astype(jnp.float32) * scale
+    new_error = xf - recon
+    return q, scale, new_error
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,2 @@
+from .profile import ArchProfile, apps_from_profiles, flops_per_token_layer, profile_arch  # noqa: F401
+from .executor import run_partition, split_params  # noqa: F401

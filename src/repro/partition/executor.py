@@ -1,0 +1,63 @@
+"""Execute a 2-partition split of an actual model: the data plane of Fig. 1.
+
+Partition 1 = embedding + layers [0, k); partition 2 = layers [k, L) + final
+norm + unembed. For encoder-decoder models the split is encoder / decoder.
+The intermediate activation (the paper's stage-1 traffic, size L1) is exactly
+what `run_partition(..., part=1)` returns and `part=2` consumes — the
+edge_serving example ships it along the route chosen by repro.core.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import layers as L
+from ..models import model as M
+from ..models.config import ModelConfig
+
+
+def split_params(cfg: ModelConfig, params, k: int):
+    """Split a stacked-layer param tree at layer boundary k."""
+    if cfg.family == "encdec":
+        p1 = {
+            "embed": params["embed"],
+            "blocks": params["blocks"],
+            "enc_final_norm": params["enc_final_norm"],
+        }
+        p2 = {
+            "embed": params["embed"],
+            "dec_blocks": params["dec_blocks"],
+            "final_norm": params["final_norm"],
+        }
+        return p1, p2
+    blocks1 = jax.tree.map(lambda a: a[:k], params["blocks"])
+    blocks2 = jax.tree.map(lambda a: a[k:], params["blocks"])
+    p1 = {"embed": params["embed"], "blocks": blocks1}
+    p2 = {
+        "embed": params["embed"],
+        "blocks": blocks2,
+        "final_norm": params["final_norm"],
+    }
+    return p1, p2
+
+
+def run_partition(cfg: ModelConfig, part_params, batch_or_act, *, part: int, k: int = 0):
+    """Run one partition. part=1 consumes the raw batch and returns the
+    stage-1 activation; part=2 consumes that activation and returns logits."""
+    kind = M._block_kind(cfg)
+    if cfg.family == "encdec":
+        if part == 1:
+            return M.encode(cfg, part_params, batch_or_act)
+        memory = batch_or_act["memory"]
+        y = L.embed_tokens(part_params["embed"], batch_or_act["dec_tokens"], cfg)
+        y, _ = M._stack_full(part_params["dec_blocks"], y, cfg, "dec", memory=memory)
+        y = L.rmsnorm(y, part_params["final_norm"], cfg.norm_eps)
+        return L.unembed(part_params["embed"], y, cfg)
+    if part == 1:
+        x = M._embed_input(cfg, part_params, batch_or_act)
+        x, _ = M._stack_full(part_params["blocks"], x, cfg, kind, causal=True)
+        return x  # the stage-1 activation (bytes = S * d * 2 = profile L1)
+    x = batch_or_act
+    x, _ = M._stack_full(part_params["blocks"], x, cfg, kind, causal=True)
+    x = L.rmsnorm(x, part_params["final_norm"], cfg.norm_eps)
+    return L.unembed(part_params["embed"], x, cfg)

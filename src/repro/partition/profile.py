@@ -1,0 +1,153 @@
+"""Bridge between the model zoo and the paper's optimizer.
+
+Every architecture enters problem (7) as an `ArchProfile`: the three stage
+packet sizes (L0 raw input, L1 split-point activation, L2 final output) and
+the two per-request partition workloads (w1, w2 in FLOPs). This is the
+"directly measured from a test run" quantity of the paper's Eq. (6) — here
+derived analytically from the architecture config (and cross-checked against
+the models in tests).
+
+Split-point conventions (DESIGN.md section 4):
+  * decoder-only families: layer boundary k (default L/4 — the paper's
+    "first partition acts as a local compression stage");
+  * encoder-decoder: the encoder/decoder boundary (the natural 2-partition
+    split); L1 is the encoder memory.
+The technique applies to ALL 10 assigned architectures; per-family nuances
+are only in how the profile is computed (MoE: active FLOPs; SSM/hybrid:
+stateless requests ship only layer activations).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..core.structs import Apps
+
+
+def _bytes_per_token_input(cfg: ModelConfig) -> float:
+    if cfg.frontend != "none":
+        return cfg.frontend_dim * 2.0  # bf16 patch/frame embeddings
+    return 4.0  # int32 token ids
+
+
+def flops_per_token_layer(cfg: ModelConfig, ctx_len: int, decoder: bool = False) -> float:
+    """Forward FLOPs per token for one layer (2 x MACs convention)."""
+    d = cfg.d_model
+    f = 0.0
+    if cfg.attends:
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        f += 2.0 * (d * h * hd + 2 * d * kv * hd + h * hd * d)  # qkvo proj
+        eff_ctx = min(ctx_len, cfg.sliding_window or ctx_len)
+        f += 4.0 * eff_ctx * h * hd  # scores + values
+        if decoder:  # cross attention
+            f += 2.0 * (d * h * hd + h * hd * d) + 4.0 * ctx_len * h * hd
+    if cfg.family in ("dense", "hybrid", "encdec"):
+        mult = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        f += 2.0 * mult * d * cfg.d_ff
+    if cfg.family == "moe":
+        mult = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        f += 2.0 * cfg.top_k * mult * d * cfg.moe_d_ff  # active experts only
+        if cfg.shared_d_ff:
+            f += 2.0 * mult * d * cfg.shared_d_ff
+        f += 2.0 * d * cfg.n_experts  # router
+    if cfg.family in ("ssm", "hybrid"):
+        din, n, nh = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+        f += 2.0 * d * (2 * din + 2 * n + nh)  # in_proj
+        f += 2.0 * cfg.conv_width * (din + 2 * n)  # conv
+        f += 2.0 * 2.0 * din * n  # state update + readout (per token)
+        f += 2.0 * din * d  # out_proj
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchProfile:
+    arch: str
+    split_layer: int
+    n_layers_total: int
+    seq_len: int
+    L0_bytes: float  # raw input per request
+    L1_bytes: float  # split-point activation per request
+    L2_bytes: float  # final output per request
+    w1_flops: float  # partition-1 compute per request
+    w2_flops: float  # partition-2 compute per request
+
+    @property
+    def L(self) -> tuple[float, float, float]:
+        return (self.L0_bytes, self.L1_bytes, self.L2_bytes)
+
+    @property
+    def w(self) -> tuple[float, float]:
+        return (self.w1_flops, self.w2_flops)
+
+    def compression_ratio(self) -> float:
+        """L1/L0 — how much the first partition compresses the stream."""
+        return self.L1_bytes / max(self.L0_bytes, 1.0)
+
+
+def profile_arch(
+    cfg: ModelConfig,
+    seq_len: int = 1024,
+    n_out_tokens: int = 32,
+    split: int | None = None,
+) -> ArchProfile:
+    """Derive the paper's (L_{a,k}, w^{a,p}) from an architecture config."""
+    if cfg.family == "encdec":
+        split_layer = cfg.n_layers  # encoder / decoder boundary
+        l0 = seq_len * _bytes_per_token_input(cfg)
+        l1 = seq_len * cfg.d_model * 2.0  # encoder memory, bf16
+        l2 = n_out_tokens * 4.0
+        w1 = seq_len * sum(
+            flops_per_token_layer(cfg, seq_len) for _ in range(cfg.n_layers)
+        )
+        w2 = seq_len * sum(
+            flops_per_token_layer(cfg, seq_len, decoder=True)
+            for _ in range(cfg.n_dec_layers)
+        )
+        w1 += 2.0 * seq_len * cfg.vocab * 0  # encoder has no unembed
+        w2 += 2.0 * n_out_tokens * cfg.d_model * cfg.vocab  # unembed
+        return ArchProfile(
+            cfg.name, split_layer, cfg.n_layers + cfg.n_dec_layers, seq_len,
+            l0, l1, l2, w1, w2,
+        )
+
+    n_l = cfg.n_layers
+    split_layer = split if split is not None else max(1, n_l // 4)
+    per_layer = flops_per_token_layer(cfg, seq_len)
+    l0 = seq_len * _bytes_per_token_input(cfg)
+    l1 = seq_len * cfg.d_model * 2.0
+    l2 = n_out_tokens * 4.0
+    w_embed = 0.0  # lookup is negligible
+    w_unembed = 2.0 * seq_len * cfg.d_model * cfg.vocab
+    w1 = seq_len * per_layer * split_layer + w_embed
+    w2 = seq_len * per_layer * (n_l - split_layer) + w_unembed
+    return ArchProfile(cfg.name, split_layer, n_l, seq_len, l0, l1, l2, w1, w2)
+
+
+def apps_from_profiles(
+    profiles: list[ArchProfile],
+    src: np.ndarray,
+    dst: np.ndarray,
+    lam: np.ndarray,
+    *,
+    byte_scale: float = 1.0,
+    flop_scale: float = 1.0,
+) -> Apps:
+    """Build the optimizer's Apps from per-request profiles.
+
+    byte_scale converts bytes -> the unit of link capacities mu (e.g. 1e-6
+    for links in MB/s); flop_scale converts FLOPs -> the unit of node service
+    rates nu (e.g. 1e-9 for GFLOP/s nodes)."""
+    n = len(profiles)
+    assert len(src) == len(dst) == len(lam) == n
+    L = np.array([[p.L0_bytes, p.L1_bytes, p.L2_bytes] for p in profiles]) * byte_scale
+    w = np.array([[p.w1_flops, p.w2_flops] for p in profiles]) * flop_scale
+    return Apps(
+        src=jnp.asarray(np.asarray(src, np.int32)),
+        dst=jnp.asarray(np.asarray(dst, np.int32)),
+        lam=jnp.asarray(np.asarray(lam, np.float32)),
+        L=jnp.asarray(L.astype(np.float32)),
+        w=jnp.asarray(w.astype(np.float32)),
+    )

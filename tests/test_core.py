@@ -1,0 +1,305 @@
+"""Unit + property tests for the paper's core algorithm (repro.core)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SCENARIOS,
+    CostModel,
+    Problem,
+    State,
+    forwarding_mass,
+    forwarding_sweep,
+    forwarding_update,
+    iot,
+    mesh,
+    objective,
+    placement_update,
+    solve_alt,
+    solve_colocated,
+    solve_congunaware,
+    solve_oneshot,
+    stage_traffic,
+    structured_init,
+    total_absorbed,
+)
+from repro.core import costs as core_costs
+from repro.core.flow import objective_with_injection
+from repro.core.marginals import cost_to_go
+from repro.core.structs import BIG_THRESHOLD
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------------------
+# Cost functions
+# ---------------------------------------------------------------------------
+class TestCosts:
+    def test_mm1_matches_exact_below_knee(self):
+        cm = CostModel()
+        F = jnp.linspace(0.0, 0.9, 50)
+        got = core_costs.link_cost(F, jnp.ones_like(F), cm)
+        want = F / (1.0 - F)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_mm1_zero_at_zero(self):
+        cm = CostModel()
+        assert float(core_costs.link_cost(jnp.array(0.0), jnp.array(3.0), cm)) == 0.0
+
+    def test_mm1_c1_continuous_at_knee(self):
+        cm = CostModel()
+        mu = 2.0
+        knee = cm.rho_max * mu
+        eps = 1e-4
+        slope = float(core_costs.link_cost_prime(jnp.array(knee), jnp.array(mu), cm))
+        lo = float(core_costs.link_cost(jnp.array(knee - eps), jnp.array(mu), cm))
+        hi = float(core_costs.link_cost(jnp.array(knee + eps), jnp.array(mu), cm))
+        # Jump must be explained by the (large) local slope => C0 continuity.
+        assert abs(hi - lo) <= 2.5 * slope * eps
+        lo = float(core_costs.link_cost_prime(jnp.array(knee - eps), jnp.array(mu), cm))
+        hi = float(core_costs.link_cost_prime(jnp.array(knee + eps), jnp.array(mu), cm))
+        # Derivative jump is second-order small => C1 continuity.
+        assert abs(hi - lo) / lo < 1e-2
+
+    def test_prime_matches_autodiff(self):
+        cm = CostModel()
+        mu = jnp.array(5.0)
+        for f in [0.5, 3.0, 4.7, 6.0, 20.0]:  # includes beyond-capacity points
+            g = jax.grad(lambda x: core_costs.link_cost(x, mu, cm))(jnp.array(f))
+            p = core_costs.link_cost_prime(jnp.array(f), mu, cm)
+            np.testing.assert_allclose(g, p, rtol=1e-4)
+
+    @given(
+        st.floats(0.1, 50.0),
+        st.floats(0.0, 3.0),
+        st.floats(0.0, 3.0),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_mm1_increasing_convex(self, mu, r1, r2):
+        """D increasing and midpoint-convex on arbitrary load pairs."""
+        cm = CostModel()
+        f1, f2 = sorted((r1 * mu, r2 * mu))
+        mu_ = jnp.array(mu)
+        d1 = float(core_costs.link_cost(jnp.array(f1), mu_, cm))
+        d2 = float(core_costs.link_cost(jnp.array(f2), mu_, cm))
+        assert d2 >= d1 - 1e-6
+        mid = float(core_costs.link_cost(jnp.array((f1 + f2) / 2), mu_, cm))
+        assert mid <= (d1 + d2) / 2 + 1e-4 * (1 + abs(d1) + abs(d2))
+
+
+# ---------------------------------------------------------------------------
+# Flow / conservation invariants (Eqs. 2-6)
+# ---------------------------------------------------------------------------
+def _mass_violation(problem, state):
+    n = problem.net.n_nodes
+    mass = forwarding_mass(state, problem.apps, n)
+    row = jnp.sum(state.phi, axis=-1)
+    return float(jnp.max(jnp.abs(row - mass)))
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+class TestFlowInvariants:
+    def test_init_feasible(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        assert _mass_violation(p, s) < 1e-5
+        assert float(jnp.min(s.phi)) >= 0.0
+        # x is one-hot per (a, p)
+        np.testing.assert_allclose(jnp.sum(s.x, axis=-1), 1.0, atol=1e-6)
+
+    def test_conservation_after_sweeps(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        for _ in range(5):
+            s = forwarding_sweep(p, s, alpha=0.5)
+        assert _mass_violation(p, s) < 1e-4
+        absorbed = total_absorbed(p, s)
+        np.testing.assert_allclose(absorbed, p.apps.lam, rtol=1e-4)
+
+    def test_conservation_after_placement(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        s = forwarding_update(p, s, t_phi=3)
+        s = placement_update(p, s)
+        absorbed = total_absorbed(p, s)
+        np.testing.assert_allclose(absorbed, p.apps.lam, rtol=1e-4)
+
+    def test_stage_traffic_nonnegative(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        t = stage_traffic(p, s)
+        assert float(jnp.min(t)) >= -1e-6
+
+    def test_phi_only_on_edges(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        s = forwarding_update(p, s, t_phi=4)
+        off_edge = jnp.where(p.net.adj[None, None] > 0, 0.0, s.phi)
+        assert float(jnp.max(jnp.abs(off_edge))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Marginals: Gallager's identity  q = dJ/d(injection)
+# ---------------------------------------------------------------------------
+class TestMarginals:
+    @pytest.mark.parametrize("stage", [0, 1, 2])
+    def test_cost_to_go_is_gradient(self, stage):
+        p = mesh()
+        s = structured_init(p)
+        s = forwarding_update(p, s, t_phi=4)
+        q, dp, kappa, t, F, G = cost_to_go(p, s)
+        a = 3
+        g = jax.grad(
+            lambda inj: objective_with_injection(p, s, a, stage, inj)
+        )(jnp.zeros(p.net.n_nodes))
+        np.testing.assert_allclose(np.asarray(g), np.asarray(q[a, stage]), rtol=2e-3, atol=1e-4)
+
+    def test_delta_min_always_proper(self):
+        """The argmin out-link must survive the blocking rule (q_j* < q_i)."""
+        p = iot()
+        s = structured_init(p)
+        s = forwarding_update(p, s, t_phi=3)
+        from repro.core.marginals import link_marginals
+
+        delta, aux = link_marginals(p, s)
+        q = aux["q"]
+        jstar = jnp.argmin(delta, axis=-1)
+        q_star = jnp.take_along_axis(q, jstar.reshape(q.shape[0], 3, -1), axis=-1)
+        n = p.net.n_nodes
+        mass = forwarding_mass(s, p.apps, n)
+        # Wherever a node must forward (mass > 0), q at its argmin link is
+        # strictly below its own cost-to-go.
+        viol = (q_star.reshape(q.shape) >= q) & (mass > 1e-6)
+        assert not bool(jnp.any(viol))
+
+
+# ---------------------------------------------------------------------------
+# Forwarding update behaviour
+# ---------------------------------------------------------------------------
+class TestForwarding:
+    def test_forwarding_reduces_comm_cost(self):
+        p = iot(load_scale=0.7)
+        s = structured_init(p)
+        _, aux0 = objective(p, s)
+        for _ in range(15):
+            s = forwarding_sweep(p, s, alpha=0.5)
+        _, aux1 = objective(p, s)
+        # Placement fixed -> computation cost unchanged, communication falls.
+        np.testing.assert_allclose(aux0["J_comp"], aux1["J_comp"], rtol=1e-4)
+        assert float(aux1["J_comm"]) <= float(aux0["J_comm"]) * 1.0 + 1e-6
+
+    def test_solver_stays_wellposed_many_sweeps(self):
+        p = smallworld_problem = SCENARIOS["smallworld"]()
+        s = structured_init(p)
+        for _ in range(25):
+            s = forwarding_sweep(p, s, alpha=0.7)
+            t = stage_traffic(p, s)
+            assert bool(jnp.all(jnp.isfinite(t)))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the paper's headline comparisons (Fig. 2 ordering)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestPaperClaims:
+    def test_alt_beats_all_baselines_everywhere(self):
+        for name, make in SCENARIOS.items():
+            p = make()
+            alt = solve_alt(p)
+            for other in (solve_oneshot(p), solve_congunaware(p), solve_colocated(p)):
+                assert alt.J <= other.J * 1.001, (name, other.name, alt.J, other.J)
+
+    def test_alt_improves_on_init(self):
+        for name, make in SCENARIOS.items():
+            p = make()
+            r = solve_alt(p)
+            assert r.J <= r.history[0] * 1.0 + 1e-6, name
+
+    def test_split_flexibility_matters_most_in_iot(self):
+        """CoLocated/ALT ratio is far larger on the hierarchical IoT net."""
+        ratios = {}
+        for name in ("iot", "geant"):
+            p = SCENARIOS[name]()
+            ratios[name] = solve_colocated(p).J / solve_alt(p).J
+        assert ratios["iot"] > ratios["geant"]
+
+    def test_load_widens_absolute_gap(self):
+        gaps = []
+        for f in (0.5, 1.0):
+            p = iot(load_scale=f)
+            gap = solve_congunaware(p).J - solve_alt(p).J
+            gaps.append(gap)
+        assert gaps[1] > gaps[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# Eta tradeoff plumbing (Fig. 5)
+# ---------------------------------------------------------------------------
+class TestEtaWeighting:
+    def test_weighted_objective_composition(self):
+        p = iot(cost=CostModel(w_comm=0.3, w_comp=0.7))
+        s = structured_init(p)
+        J, aux = objective(p, s)
+        np.testing.assert_allclose(
+            float(J), 0.3 * float(aux["J_comm"]) + 0.7 * float(aux["J_comp"]), rtol=1e-6
+        )
+
+    def test_extreme_eta_shifts_solution(self):
+        comm_heavy = solve_alt(iot(cost=CostModel(w_comm=0.95, w_comp=0.05)))
+        comp_heavy = solve_alt(iot(cost=CostModel(w_comm=0.05, w_comp=0.95)))
+        # Optimizing mostly-communication should yield lower comm than the
+        # mostly-computation solution, and vice versa.
+        assert comm_heavy.J_comm < comp_heavy.J_comm
+        assert comp_heavy.J_comp < comm_heavy.J_comp
+
+
+# ---------------------------------------------------------------------------
+# Randomized-network property tests (hypothesis)
+# ---------------------------------------------------------------------------
+class TestRandomNetworks:
+    @given(st.integers(8, 20), st.integers(0, 10_000), st.floats(0.2, 0.9))
+    @settings(max_examples=10, deadline=None)
+    def test_invariants_hold_on_random_graphs(self, n, seed, alpha):
+        from repro.core import random_connected
+
+        p = random_connected(n, max(2, n // 3), seed=seed, load_scale=0.5)
+        s = structured_init(p)
+        for _ in range(3):
+            s = forwarding_sweep(p, s, alpha=float(alpha))
+        # conservation + feasibility + finiteness, any graph, any alpha
+        absorbed = total_absorbed(p, s)
+        np.testing.assert_allclose(
+            np.asarray(absorbed), np.asarray(p.apps.lam), rtol=1e-3
+        )
+        assert float(jnp.min(s.phi)) >= 0.0
+        J, _ = objective(p, s)
+        assert np.isfinite(float(J))
+
+    @pytest.mark.parametrize("seed", [11, 42, 1234])
+    def test_alt_improves_on_random_networks(self, seed):
+        from repro.core import random_connected
+
+        p = random_connected(14, 6, seed=seed)
+        r = solve_alt(p, m_max=8, t_phi=5)
+        assert r.J <= r.history[0] * 1.0 + 1e-6
+        assert np.isfinite(r.J)
+
+    @given(st.integers(0, 500))
+    @settings(max_examples=8, deadline=None)
+    def test_placement_preserves_feasibility(self, seed):
+        from repro.core import random_connected
+
+        p = random_connected(12, 5, seed=seed, load_scale=0.7)
+        s = structured_init(p)
+        s = forwarding_update(p, s, t_phi=2)
+        s2 = placement_update(p, s)
+        # one-hot placement, consistent absorption, conserved flow
+        np.testing.assert_allclose(np.asarray(jnp.sum(s2.x, axis=-1)), 1.0, atol=1e-6)
+        absorbed = total_absorbed(p, s2)
+        np.testing.assert_allclose(
+            np.asarray(absorbed), np.asarray(p.apps.lam), rtol=1e-3
+        )

@@ -1,0 +1,174 @@
+"""Dry-run + roofline harness tests.
+
+The full 80-cell matrix runs offline (results/dryrun/*.json are committed
+artifacts); here we (a) validate the HLO cost model against analytic FLOPs,
+(b) run one real production-mesh cell in a subprocess (XLA_FLAGS isolation),
+(c) check the recorded artifacts cover every required (arch x shape x mesh)
+cell, and (d) sanity-check the roofline math."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model
+# ---------------------------------------------------------------------------
+class TestHloCost:
+    def test_dot_flops_exact(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.launch import hlo_cost
+
+        a = jnp.zeros((128, 256), jnp.float32)
+        b = jnp.zeros((256, 64), jnp.float32)
+        hlo = jax.jit(lambda x, y: x @ y).lower(a, b).compile().as_text()
+        res = hlo_cost.analyze(hlo)
+        assert res["flops"] == 2 * 128 * 256 * 64
+
+    def test_scan_trip_scaling(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.launch import hlo_cost
+
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        x = jnp.zeros((32, 32), jnp.float32)
+        hlo = jax.jit(f).lower(x, x).compile().as_text()
+        res = hlo_cost.analyze(hlo)
+        assert res["flops"] == 7 * 2 * 32 * 32 * 32, res["flops"]
+
+    def test_flops_close_to_analytic_train(self):
+        """Whole-model check: HLO flops within 2x of 6*N*D (remat/attn gap)."""
+        import dataclasses
+        import jax
+        from repro.configs import get_config
+        from repro.launch import hlo_cost
+        from repro.launch import steps as St
+        from repro.models.config import SHAPES
+
+        cfg = dataclasses.replace(
+            get_config("qwen1.5-0.5b"), remat=False, n_layers=4
+        )
+        shape = dataclasses.replace(SHAPES["train_4k"], global_batch=4, seq_len=512)
+        step = St.make_train_step(cfg)
+        p = St.param_specs(cfg)
+        o = St.opt_specs(cfg)
+        b = St.batch_specs(cfg, shape)
+        hlo = jax.jit(step).lower(p, o, b).compile().as_text()
+        res = hlo_cost.analyze(hlo)
+        toks = shape.global_batch * shape.seq_len
+        analytic = 6.0 * cfg.n_active_params() * toks
+        assert 0.5 < res["flops"] / analytic < 2.0, res["flops"] / analytic
+
+
+# ---------------------------------------------------------------------------
+# one real production-mesh cell (subprocess: needs fresh XLA_FLAGS)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "qwen1.5-0.5b", "--shape", "decode_32k",
+            "--tag", "citest",
+        ],
+        env=env, capture_output=True, text=True, timeout=1200, cwd=str(REPO),
+    )
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "OK " in r.stdout
+    rec = json.loads(
+        (RESULTS / "qwen1.5-0.5b__decode_32k__16x16-citest.json").read_text()
+    )
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["hlo_flops"] > 0
+    assert "all-gather" in rec["collective_bytes"] or "all-reduce" in rec["collective_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# the committed 80-cell matrix is complete
+# ---------------------------------------------------------------------------
+def test_dryrun_matrix_complete():
+    if not RESULTS.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    from repro.configs import ARCHS, get_config
+    from repro.models.config import SHAPES, shape_applicable
+
+    missing, failed = [], []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                f = RESULTS / f"{arch}__{shape}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+                    continue
+                rec = json.loads(f.read_text())
+                ok, _ = shape_applicable(get_config(arch), SHAPES[shape])
+                want = "ok" if ok else "skipped"
+                if rec["status"] != want:
+                    failed.append((f.name, rec["status"], rec.get("error", "")[:100]))
+    assert not missing, f"{len(missing)} cells missing: {missing[:5]}"
+    assert not failed, failed[:3]
+
+
+def test_dryrun_skips_match_design():
+    """long_500k skips exactly the pure full-attention archs."""
+    from repro.configs import ARCHS, get_config
+    from repro.models.config import SHAPES, shape_applicable
+
+    runs = {a for a in ARCHS if shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert runs == {"mamba2-370m", "hymba-1.5b", "mixtral-8x22b"}
+
+
+# ---------------------------------------------------------------------------
+# roofline math
+# ---------------------------------------------------------------------------
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        from benchmarks.roofline import analyze_record
+
+        rec = {
+            "status": "ok", "arch": "qwen1.5-0.5b", "shape": "train_4k",
+            "mesh": "16x16", "n_devices": 256,
+            "hlo_flops": 197e12,  # exactly 1 second of compute
+            "hlo_bytes_accessed": 819e9 * 2,  # 2 seconds of HBM
+            "collective_bytes": {"all-reduce": 50e9},  # 2 s (factor 2)
+        }
+        a = analyze_record(rec)
+        assert abs(a["t_compute_s"] - 1.0) < 1e-9
+        assert abs(a["t_memory_s"] - 2.0) < 1e-9
+        assert abs(a["t_collective_s"] - 2.0) < 1e-9
+        assert a["dominant"] in ("memory", "collective")
+        assert 0 < a["mfu_bound"] <= 1.0
+
+    def test_model_flops_kinds(self):
+        from benchmarks.roofline import model_flops
+
+        train = model_flops("qwen1.5-0.5b", "train_4k")
+        prefill = model_flops("qwen1.5-0.5b", "prefill_32k")
+        decode = model_flops("qwen1.5-0.5b", "decode_32k")
+        assert train > prefill > decode > 0
+
+    def test_moe_uses_active_params(self):
+        from benchmarks.roofline import model_flops
+        from repro.configs import get_config
+
+        mf = model_flops("mixtral-8x22b", "train_4k")
+        cfg = get_config("mixtral-8x22b")
+        d = 256 * 4096
+        assert abs(mf - 6.0 * cfg.n_active_params() * d) < 1e-6 * mf
+        assert cfg.n_active_params() < 0.5 * cfg.n_params()

@@ -1,0 +1,194 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.minplus.kernel import minplus_matmul_pallas
+from repro.kernels.minplus.ref import apsp_ref, minplus_matmul_ref
+from repro.kernels.minplus.ops import apsp, apsp_with_nexthop
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# minplus
+# ---------------------------------------------------------------------------
+MINPLUS_SHAPES = [
+    (8, 8, 8),
+    (17, 17, 17),
+    (64, 128, 96),
+    (128, 128, 128),
+    (200, 170, 130),
+    (256, 256, 256),
+]
+
+
+@pytest.mark.parametrize("shape", MINPLUS_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_minplus_matches_ref(shape, dtype):
+    m, k, n = shape
+    rng = np.random.RandomState(hash(shape) % 2**31)
+    a = rng.uniform(0, 10, (m, k)).astype(np.float32)
+    b = rng.uniform(0, 10, (k, n)).astype(np.float32)
+    a[rng.rand(m, k) < 0.2] = 1e18  # unreachable entries
+    a_j, b_j = jnp.asarray(a, dtype), jnp.asarray(b, dtype)
+    got = minplus_matmul_pallas(a_j, b_j, interpret=True)
+    want = minplus_matmul_ref(a_j.astype(jnp.float32), b_j.astype(jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_minplus_block_sizes():
+    rng = np.random.RandomState(0)
+    a = rng.uniform(0, 5, (96, 96)).astype(np.float32)
+    b = rng.uniform(0, 5, (96, 96)).astype(np.float32)
+    want = minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    for block in (32, 64, 128, 256):
+        got = minplus_matmul_pallas(
+            jnp.asarray(a), jnp.asarray(b), block=block, interpret=True
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_apsp_matches_networkx():
+    import networkx as nx
+
+    rng = np.random.RandomState(3)
+    g = nx.connected_watts_strogatz_graph(40, 4, 0.3, seed=1)
+    n = 40
+    W = np.full((n, n), 1e18, np.float32)
+    for u, v in g.edges():
+        w = rng.uniform(0.5, 5.0)
+        W[u, v] = w
+        W[v, u] = w
+    dist = np.asarray(apsp(jnp.asarray(W)))
+    gg = nx.DiGraph()
+    for u in range(n):
+        for v in range(n):
+            if W[u, v] < 1e17:
+                gg.add_edge(u, v, weight=float(W[u, v]))
+    for u, dd in nx.all_pairs_dijkstra_path_length(gg):
+        for v, d in dd.items():
+            assert abs(dist[u, v] - d) < 1e-3 * (1 + d)
+
+
+def test_apsp_pallas_matches_ref_path():
+    rng = np.random.RandomState(5)
+    n = 50
+    W = np.full((n, n), 1e18, np.float32)
+    for _ in range(200):
+        u, v = rng.randint(0, n, 2)
+        if u != v:
+            W[u, v] = rng.uniform(0.1, 4.0)
+    got = apsp(jnp.asarray(W), use_pallas=True, interpret=True)
+    want = apsp(jnp.asarray(W))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_nexthop_descends():
+    """Following next-hops strictly decreases distance-to-target."""
+    import networkx as nx
+
+    g = nx.connected_watts_strogatz_graph(25, 4, 0.2, seed=2)
+    n = 25
+    rng = np.random.RandomState(7)
+    W = np.full((n, n), 1e18, np.float32)
+    for u, v in g.edges():
+        w = rng.uniform(0.5, 3.0)
+        W[u, v] = w
+        W[v, u] = w
+    dist, nh = apsp_with_nexthop(jnp.asarray(W))
+    dist, nh = np.asarray(dist), np.asarray(nh)
+    for target in range(0, n, 5):
+        for i in range(n):
+            if i == target:
+                continue
+            j = nh[i, target]
+            assert dist[j, target] < dist[i, target]
+
+
+@given(st.integers(5, 60), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_apsp_triangle_inequality(n, seed):
+    rng = np.random.RandomState(seed)
+    W = rng.uniform(0.1, 5.0, (n, n)).astype(np.float32)
+    W[rng.rand(n, n) < 0.5] = 1e18
+    d = np.asarray(apsp(jnp.asarray(W)))
+    # d[i,j] <= d[i,k] + d[k,j] for all triples (vectorized check).
+    via = (d[:, :, None] + d[None, :, :]).min(axis=1)
+    assert (d <= via + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (B, H, Kv, Sq, Sk, D, causal, window)
+    (1, 4, 4, 128, 128, 64, True, None),     # MHA causal
+    (2, 8, 2, 256, 256, 64, True, None),     # GQA 4:1
+    (1, 8, 1, 128, 128, 128, True, None),    # MQA
+    (1, 4, 4, 128, 128, 64, False, None),    # bidirectional (encoder)
+    (1, 8, 2, 256, 256, 64, True, 128),      # sliding window
+    (2, 4, 2, 100, 100, 64, True, None),     # non-multiple seq (padding)
+    (1, 4, 2, 64, 192, 64, True, None),      # Sq != Sk with q_offset
+    (1, 2, 2, 128, 128, 256, True, None),    # gemma-style d=256
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_matches_ref(case):
+    b, h, kv, sq, sk, d, causal, window = case
+    rng = np.random.RandomState(abs(hash(case)) % 2**31)
+    q = jnp.asarray(rng.randn(b, h, sq, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, kv, sk, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, kv, sk, d), jnp.float32)
+    q_offset = sk - sq if sq != sk else 0
+    got = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset, interpret=True
+    )
+    want = attention_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_dtypes(dtype):
+    rng = np.random.RandomState(11)
+    q = jnp.asarray(rng.randn(1, 4, 128, 64), dtype)
+    k = jnp.asarray(rng.randn(1, 2, 128, 64), dtype)
+    v = jnp.asarray(rng.randn(1, 2, 128, 64), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_flash_block_boundaries():
+    """Non-128 block sizes and seqs crossing block boundaries."""
+    rng = np.random.RandomState(13)
+    q = jnp.asarray(rng.randn(1, 2, 200, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 200, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 200, 64), jnp.float32)
+    want = attention_ref(q, k, v, causal=True)
+    for bq, bk in ((64, 64), (128, 64), (64, 128)):
+        got = flash_attention_pallas(q, k, v, causal=True, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_fully_masked_rows_are_zero():
+    """Rows before the window see no keys and must output exactly 0."""
+    rng = np.random.RandomState(17)
+    q = jnp.asarray(rng.randn(1, 2, 8, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 2, 8, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 2, 8, 64), jnp.float32)
+    # q_offset far beyond kv length + tiny window => nothing visible for the
+    # earliest rows is impossible here; instead use causal with offset -1:
+    # query positions all < 0 relative to keys -> fully masked.
+    got = flash_attention_pallas(
+        q, k, v, causal=True, q_offset=-100, interpret=True
+    )
+    np.testing.assert_allclose(got, jnp.zeros_like(got), atol=1e-6)

@@ -1,0 +1,108 @@
+"""Partition bridge tests: profiles are sane, the split executor is exact,
+and profiles drive the core optimizer end to end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.core import CostModel, Network, Problem, solve_alt, solve_colocated
+from repro.core.structs import BIG
+from repro.models import init_params, logits_fn
+from repro.partition import (
+    apps_from_profiles,
+    profile_arch,
+    run_partition,
+    split_params,
+)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_profile_shapes_and_compression(arch):
+    cfg = get_config(arch)
+    p = profile_arch(cfg, seq_len=1024)
+    assert p.w1_flops > 0 and p.w2_flops > 0
+    assert p.L1_bytes > 0 and p.L0_bytes > 0 and p.L2_bytes > 0
+    # Default split puts the lighter partition first (paper's structure),
+    # except tiny-layer-count archs where the unembed dominates.
+    if cfg.family != "encdec":
+        assert p.split_layer <= cfg.n_layers // 2
+
+
+def test_profile_flops_scale_with_params():
+    """6*N*D rule of thumb: per-token forward FLOPs ~ 2 * active params."""
+    for arch in ("qwen1.5-0.5b", "gemma-2b", "mamba2-370m"):
+        cfg = get_config(arch)
+        p = profile_arch(cfg, seq_len=1024)
+        total = (p.w1_flops + p.w2_flops) / p.seq_len  # per token
+        approx = 2.0 * cfg.n_active_params()
+        assert 0.3 * approx < total < 3.0 * approx, (arch, total, approx)
+
+
+def test_moe_profile_uses_active_flops():
+    moe = profile_arch(get_config("mixtral-8x22b"), seq_len=256)
+    total_params = get_config("mixtral-8x22b").n_params()
+    active_params = get_config("mixtral-8x22b").n_active_params()
+    per_token = (moe.w1_flops + moe.w2_flops) / moe.seq_len
+    assert per_token < 2.5 * active_params  # not paying for all 8 experts
+    assert active_params < 0.5 * total_params
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-370m", "hymba-1.5b", "seamless-m4t-medium"])
+def test_split_executor_matches_monolithic(arch):
+    """partition1 -> ship activation -> partition2 == full model logits."""
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 1, 32
+    key = jax.random.PRNGKey(1)
+    if cfg.family == "encdec":
+        batch = {
+            "feats": jax.random.normal(key, (b, s, cfg.frontend_dim)),
+            "dec_tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+        }
+        k = cfg.n_layers
+    else:
+        batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+        k = 1
+    p1, p2 = split_params(cfg, params, k)
+    act = run_partition(cfg, p1, batch, part=1, k=k)
+    if cfg.family == "encdec":
+        logits = run_partition(
+            cfg, p2, {"memory": act, "dec_tokens": batch["dec_tokens"]}, part=2, k=k
+        )
+    else:
+        logits = run_partition(cfg, p2, act, part=2, k=k)
+    want = logits_fn(cfg, params, batch)
+    np.testing.assert_allclose(
+        logits.astype(jnp.float32), want.astype(jnp.float32), rtol=2e-3, atol=2e-3
+    )
+    # The shipped activation has exactly the profiled L1 size.
+    prof = profile_arch(cfg, seq_len=s)
+    assert act.size * 2 == prof.L1_bytes * b  # bf16 = 2 bytes/elt
+
+
+def test_profiles_drive_core_optimizer():
+    """End-to-end: 10 arch profiles -> Apps -> ALT solves a small edge net."""
+    profiles = [profile_arch(get_config(a), seq_len=256) for a in ARCHS]
+    n = 8
+    adj = np.zeros((n, n), np.float32)
+    mu = np.full((n, n), BIG, np.float32)
+    ring = [(i, (i + 1) % n) for i in range(n)]
+    for u, v in ring + [(0, 4), (2, 6)]:
+        for i, j in ((u, v), (v, u)):
+            adj[i, j] = 1.0
+            mu[i, j] = 100e6  # 100 MB/s links
+    nu = np.array([50e9, 200e9, 50e9, 400e9, 50e9, 200e9, 50e9, 800e9], np.float32)
+    net = Network(adj=jnp.asarray(adj), mu=jnp.asarray(mu), nu=jnp.asarray(nu))
+    rng = np.random.RandomState(0)
+    src = rng.randint(0, n, len(profiles))
+    apps = apps_from_profiles(
+        profiles, src, src, np.full(len(profiles), 2.0), byte_scale=1.0, flop_scale=1.0
+    )
+    problem = Problem(net=net, apps=apps, cost=CostModel())
+    alt = solve_alt(problem, m_max=10)
+    colo = solve_colocated(problem, m_max=10)
+    assert np.isfinite(alt.J)
+    assert alt.J <= colo.J * 1.001
