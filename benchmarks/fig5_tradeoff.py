@@ -3,24 +3,34 @@
 J_eta = eta * J_comm + (1-eta) * J_comp. Validates: the optimized solution
 adapts to the weighting (comm-heavy eta gives lower comm, comp-heavy gives
 lower comp), and the weighted total has an interior minimum — neither
-extreme is universally optimal."""
+extreme is universally optimal.
+
+The eta grid is solved as ONE batched fleet: per-instance cost-model weights
+are pytree data (structs.CostModel), so all seven operating points share a
+single jitted ALT computation."""
 from __future__ import annotations
 
 import json
 
-from repro.core import CostModel, iot, solve_alt
+from repro.core import iot
+from repro.fleet import eta_grid, solve_fleet
 
 ETAS = (0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95)
 
 
 def run(print_fn=print) -> dict:
+    fleet = eta_grid(iot, ETAS)
+    res = solve_fleet(fleet, m_max=30, t_phi=10)
     out = {}
-    for eta in ETAS:
-        r = solve_alt(iot(cost=CostModel(w_comm=eta, w_comp=1.0 - eta)))
-        out[str(eta)] = {"J_eta": r.J, "J_comm": r.J_comm, "J_comp": r.J_comp}
+    for i, eta in enumerate(ETAS):
+        out[str(eta)] = {
+            "J_eta": float(res.J[i]),
+            "J_comm": float(res.J_comm[i]),
+            "J_comp": float(res.J_comp[i]),
+        }
         print_fn(
-            f"fig5,eta={eta:4.2f} J_eta={r.J:12.3f} "
-            f"comm={r.J_comm:12.2f} comp={r.J_comp:12.2f}"
+            f"fig5,eta={eta:4.2f} J_eta={res.J[i]:12.3f} "
+            f"comm={res.J_comm[i]:12.2f} comp={res.J_comp[i]:12.2f}"
         )
     js = [out[str(e)]["J_eta"] for e in ETAS]
     interior_min = min(js[1:-1])

@@ -15,18 +15,24 @@ from benchmarks import (
     fig2_scenarios,
     fig4_load_sweep,
     fig5_tradeoff,
+    fleet_bench,
     kernel_bench,
+    roofline,
     scale_control_plane,
     table1_topologies,
 )
 
+# Every benchmarks/*.py module (except this harness) is registered here, so
+# --only accepts each by name and the table is the complete inventory.
 BENCHES = {
     "table1": table1_topologies.run,   # Table I scenario configs
     "fig2": fig2_scenarios.run,        # scenarios x methods (headline)
-    "fig4": fig4_load_sweep.run,       # load sweep
-    "fig5": fig5_tradeoff.run,         # comm/comp tradeoff
+    "fig4": fig4_load_sweep.run,       # load sweep (batched fleet)
+    "fig5": fig5_tradeoff.run,         # comm/comp tradeoff (batched fleet)
     "kernels": kernel_bench.run,       # Pallas kernels vs oracles
     "scale": scale_control_plane.run,  # beyond-paper: fleet-scale control
+    "fleet": fleet_bench.run,          # batched-vs-sequential fleet engine
+    "roofline": roofline.run,          # informational; needs dry-run artifacts
 }
 
 
@@ -45,16 +51,6 @@ def main() -> int:
         except Exception:
             failures.append(name)
             traceback.print_exc()
-    # Roofline table (requires dry-run artifacts; informational).
-    try:
-        from benchmarks import roofline
-
-        rows = roofline.load_all()
-        if rows:
-            print("=== roofline (from dry-run artifacts) ===")
-            print(roofline.fmt_table(rows))
-    except Exception:
-        traceback.print_exc()
     if failures:
         print(f"FAILED: {failures}")
         return 1

@@ -8,6 +8,7 @@ from .structs import (  # noqa: F401
     Network,
     Problem,
     State,
+    app_live_mask,
     forwarding_mass,
 )
 from .flow import loads, objective, stage_traffic, total_absorbed  # noqa: F401
@@ -22,4 +23,13 @@ from .alt import (  # noqa: F401
     solve_congunaware,
     solve_oneshot,
 )
-from .scenarios import SCENARIOS, geant, iot, mesh, random_connected, smallworld  # noqa: F401
+from .scenarios import (  # noqa: F401
+    SCENARIOS,
+    build_network,
+    gen_apps,
+    geant,
+    iot,
+    mesh,
+    random_connected,
+    smallworld,
+)

@@ -107,16 +107,12 @@ def solve_oneshot(
     return _eval(problem, state, "OneShot", [float(J0), float(J1)], 1)
 
 
-def solve_congunaware(problem: Problem, *, use_pallas: bool = False) -> Result:
-    """Shortest extended path under linear costs, evaluated with true costs.
+def linearize(problem: Problem) -> Problem:
+    """The same problem under congestion-blind linear costs (D=F/mu, C=G/nu).
 
-    Implementation note: with linear costs the zero-load marginals ARE the
-    link weights (D' = 1/mu, C' = 1/nu constants), so the extended-graph
-    shortest path over (stage-0 copy, partition-1 transition, stage-1 copy,
-    partition-2 transition, stage-2 copy) reduces exactly to the structured
-    initialization's joint (h1, h2) scan under the linear cost model.
-    """
-    lin = Problem(
+    Shared by the sequential and fleet CongUnaware baselines so their
+    linearization can never diverge."""
+    return Problem(
         net=problem.net,
         apps=problem.apps,
         cost=CostModel(
@@ -126,7 +122,18 @@ def solve_congunaware(problem: Problem, *, use_pallas: bool = False) -> Result:
             w_comp=problem.cost.w_comp,
         ),
     )
-    state = structured_init(lin, use_pallas=use_pallas)
+
+
+def solve_congunaware(problem: Problem, *, use_pallas: bool = False) -> Result:
+    """Shortest extended path under linear costs, evaluated with true costs.
+
+    Implementation note: with linear costs the zero-load marginals ARE the
+    link weights (D' = 1/mu, C' = 1/nu constants), so the extended-graph
+    shortest path over (stage-0 copy, partition-1 transition, stage-1 copy,
+    partition-2 transition, stage-2 copy) reduces exactly to the structured
+    initialization's joint (h1, h2) scan under the linear cost model.
+    """
+    state = structured_init(linearize(problem), use_pallas=use_pallas)
     return _eval(problem, state, "CongUnaware", [], 0)
 
 
@@ -137,6 +144,7 @@ def solve_colocated(
     t_phi: int = 10,
     alpha: float = 0.5,
     tol: float = 1e-3,
+    patience: int = 4,
     use_pallas: bool = False,
 ) -> Result:
     """Both partitions at a single node; forwarding still congestion-aware."""
@@ -146,6 +154,7 @@ def solve_colocated(
         t_phi=t_phi,
         alpha=alpha,
         tol=tol,
+        patience=patience,
         colocate=True,
         use_pallas=use_pallas,
         name="CoLocated",

@@ -78,10 +78,18 @@ def forwarding_sweep(problem: Problem, state: State, alpha: float = 0.5) -> Stat
     return State(x=state.x, phi=phi)
 
 
+@functools.partial(jax.jit, static_argnames=("t_phi", "alpha"))
 def forwarding_update(
     problem: Problem, state: State, *, t_phi: int = 8, alpha: float = 0.5
 ) -> State:
-    """T_phi inner forwarding sweeps (the paper's forwarding subproblem 8)."""
-    for _ in range(t_phi):
-        state = forwarding_sweep(problem, state, alpha=alpha)
-    return state
+    """T_phi inner forwarding sweeps (the paper's forwarding subproblem 8).
+
+    A fori_loop rather than a Python loop so the update stays a single XLA
+    while-op when embedded in outer lax.scan bodies (the batched fleet
+    solver traces this once per outer round, not t_phi times).
+    """
+
+    def body(_, s):
+        return forwarding_sweep(problem, s, alpha=alpha)
+
+    return jax.lax.fori_loop(0, t_phi, body, state)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from ..kernels.minplus import apsp_with_nexthop
 from .marginals import cost_to_go
-from .structs import Problem, State, one_hot
+from .structs import Problem, State, app_live_mask, one_hot
 
 
 def _sp_tree_phi(nexthop_to: jax.Array, target: jax.Array, mass: jax.Array, n: int):
@@ -160,6 +160,7 @@ def repair_phi(
         return jnp.stack([phi0, phi1, phi_a[2]], axis=0)
 
     phi = jax.vmap(per_app)(new.phi, old_hosts, new_hosts, apps.dst)
+    phi = phi * app_live_mask(apps)[:, None, None, None]
     return State(x=new.x, phi=phi)
 
 
@@ -231,4 +232,5 @@ def structured_init(
         )
 
     phi = jax.vmap(per_app)(h1, h2, apps.dst)
+    phi = phi * app_live_mask(apps)[:, None, None, None]
     return State(x=x, phi=phi)

@@ -24,7 +24,13 @@ DEFAULT_L = (2.0, 0.8, 0.3)
 DEFAULT_W = (0.3, 1.0)
 
 
-def _build_network(n, und_edges, mu_map, nu, default_mu=10.0):
+def build_network(n, und_edges, mu_map, nu, default_mu=10.0):
+    """Assemble a `Network` from an undirected edge list + rate maps.
+
+    Public so scenario generators outside this module (fleet/generator.py)
+    share one canonical construction: adj from the edge list, per-direction
+    mu from `mu_map` (falling back to `default_mu`), BIG-sentinel mu on
+    non-edges."""
     adj = np.zeros((n, n), dtype=np.float32)
     mu = np.full((n, n), 1.0, dtype=np.float32)  # placeholder off-edges
     for (u, v) in und_edges:
@@ -37,7 +43,7 @@ def _build_network(n, und_edges, mu_map, nu, default_mu=10.0):
     )
 
 
-def _gen_apps(
+def gen_apps(
     rng: np.random.RandomState,
     n_apps: int,
     src_pool,
@@ -92,9 +98,9 @@ def iot(load_scale: float = 1.0, seed: int = 0, cost: CostModel | None = None) -
             edges.append((dev, e_srv))
             mu_map[(dev, e_srv)] = 8.0
     nu = np.array([80.0] + [12.0] * 4 + [2.0] * 12, np.float32)
-    net = _build_network(n, edges, mu_map, nu)
+    net = build_network(n, edges, mu_map, nu)
     rng = np.random.RandomState(seed)
-    apps = _gen_apps(rng, 20, np.arange(5, 17), "same", n, load_scale=load_scale)
+    apps = gen_apps(rng, 20, np.arange(5, 17), "same", n, load_scale=load_scale)
     return Problem(net=net, apps=apps, cost=cost or CostModel())
 
 
@@ -111,9 +117,9 @@ def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None) 
             if r + 1 < side:
                 edges.append((u, u + side))
     nu = np.full(n, 10.0, np.float32)
-    net = _build_network(n, edges, {}, nu, default_mu=10.0)
+    net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = _gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
     return Problem(net=net, apps=apps, cost=cost or CostModel())
 
 
@@ -125,9 +131,9 @@ def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = 
     g = nx.connected_watts_strogatz_graph(n, 4, 0.1, seed=7)
     edges = list(g.edges())
     nu = np.full(n, 10.0, np.float32)
-    net = _build_network(n, edges, {}, nu, default_mu=10.0)
+    net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = _gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
     return Problem(net=net, apps=apps, cost=cost or CostModel())
 
 
@@ -146,9 +152,9 @@ _GEANT_EDGES = [
 def geant(load_scale: float = 1.0, seed: int = 3, cost: CostModel | None = None) -> Problem:
     n = 22
     nu = np.full(n, 10.0, np.float32)
-    net = _build_network(n, _GEANT_EDGES, {}, nu, default_mu=10.0)
+    net = build_network(n, _GEANT_EDGES, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = _gen_apps(rng, 30, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 30, np.arange(n), "random", n, load_scale=load_scale)
     return Problem(net=net, apps=apps, cost=cost or CostModel())
 
 
@@ -169,8 +175,8 @@ def random_connected(
     rng = np.random.RandomState(seed + 1)
     nu = rng.uniform(5.0, 15.0, size=n).astype(np.float32)
     mu_map = {e: float(rng.uniform(5.0, 15.0)) for e in edges}
-    net = _build_network(n, edges, mu_map, nu)
-    apps = _gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
+    net = build_network(n, edges, mu_map, nu)
+    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
     return Problem(net=net, apps=apps, cost=cost or CostModel())
 
 

@@ -90,6 +90,11 @@ class CostModel:
                 infeasible iterates; see DESIGN.md section 8)
     w_comm / w_comp : objective weights (eta, 1-eta) for the Fig-5 tradeoff;
                 (1, 1) reproduces the paper's main unweighted objective.
+
+    `rho_max` / `w_comm` / `w_comp` are pytree *data* leaves (scalars), so
+    cost models may differ per instance inside a stacked fleet (e.g. the
+    Fig-5 eta grid solved as one batch — see fleet/solve.py). Only `kind`
+    is static metadata: it selects a code path, so a fleet must share it.
     """
 
     kind: str = "mm1"
@@ -98,7 +103,7 @@ class CostModel:
     w_comp: float = 1.0
 
 
-_register(CostModel, [], ["kind", "rho_max", "w_comm", "w_comp"])
+_register(CostModel, ["rho_max", "w_comm", "w_comp"], ["kind"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,6 +139,17 @@ def one_hot(idx: jax.Array, n: int) -> jax.Array:
     return jax.nn.one_hot(idx, n, dtype=jnp.float32)
 
 
+def app_live_mask(apps: Apps) -> jax.Array:
+    """[A] 1.0 for apps with positive arrival rate, else 0.0.
+
+    Zero-rate apps route nothing, so they carry zero forwarding mass
+    (phi = 0, hence (I - Phi^T) = I on their stages). This is what keeps
+    fleet padding inert: a padded phantom app must never accumulate a
+    cyclic phi-support that would make the flow solve singular
+    (DESIGN.md section 9)."""
+    return (apps.lam > 0).astype(jnp.float32)
+
+
 @partial(jax.jit, static_argnames=("n",))
 def forwarding_mass(state: State, apps: Apps, n: int) -> jax.Array:
     """[A, K, V] total forwarding fraction each node must emit per stage.
@@ -141,9 +157,11 @@ def forwarding_mass(state: State, apps: Apps, n: int) -> jax.Array:
     Eq. (2a): sum_j phi^{a,0}_{ij} = 1 - x^{a,1}_i  (partition-1 host absorbs)
               sum_j phi^{a,1}_{ij} = 1 - x^{a,2}_i  (partition-2 host absorbs)
     Eq. (2b): sum_j phi^{a,2}_{ij} = 0 at d_a else 1.
+
+    Apps with lambda_a = 0 have zero mass on every stage (see app_live_mask).
     """
     dst_oh = one_hot(apps.dst, n)  # [A, V]
     m0 = 1.0 - state.x[:, 0, :]
     m1 = 1.0 - state.x[:, 1, :]
     m2 = 1.0 - dst_oh
-    return jnp.stack([m0, m1, m2], axis=1)
+    return jnp.stack([m0, m1, m2], axis=1) * app_live_mask(apps)[:, None, None]

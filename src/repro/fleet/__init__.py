@@ -1,0 +1,33 @@
+"""Fleet engine: batched multi-scenario ALT solving over padded ensembles.
+
+Pads heterogeneous `Problem` instances to a common (V, A) envelope with
+validity masks (pad.py), stacks them into one pytree, and runs the whole
+ALT pipeline vmapped over the instance axis as a single jitted computation
+(solve.py). generator.py samples reproducible scenario fleets well beyond
+the paper's four fixed topologies. See DESIGN.md section 9.
+"""
+from .pad import (  # noqa: F401
+    NU_PAD,
+    PadInfo,
+    fleet_envelope,
+    pad_apps,
+    pad_network,
+    pad_problem,
+    stack_problems,
+)
+from .solve import (  # noqa: F401
+    METHODS,
+    FleetResult,
+    solve_fleet,
+    solve_sequential,
+)
+from .generator import (  # noqa: F401
+    FAMILIES,
+    barabasi_albert,
+    erdos_renyi,
+    eta_grid,
+    iot_hierarchy,
+    load_grid,
+    perturbed_geant,
+    sample_fleet,
+)

@@ -1,0 +1,160 @@
+"""Mask-aware padding of heterogeneous problems to a common (V, A) envelope.
+
+The batched fleet solver (fleet/solve.py) vmaps the whole ALT pipeline over
+an instance axis, which requires every instance to share one static shape.
+Heterogeneous instances are padded up to the fleet envelope so that the
+padded coordinates are *provably inert* (DESIGN.md section 9):
+
+  padded nodes   - no adjacency (adj = 0), BIG-sentinel link rates (mu), and
+                   a vanishing compute rate nu = NU_PAD. Zero incident
+                   traffic means D and C contributions are exactly 0, while
+                   the *marginal* compute cost C'(0) = 1/NU_PAD is enormous,
+                   so neither the structured init nor any placement sweep
+                   ever selects a padded host (link distances to padded
+                   nodes are >= BIG for the same reason).
+  padded apps    - lambda = 0, L = 0, w = 0 with src = dst = node 0. They
+                   route zero traffic, add zero load in the sequential
+                   placement scan, and contribute zero to J.
+
+Because every padded quantity enters the objective and the marginals
+multiplicatively through zero traffic / zero rates, the solver trajectory on
+the real coordinates of a padded instance is identical to solving the
+unpadded instance (up to float32 rounding in the dense solves) — that is
+the equivalence contract tests/test_fleet.py enforces.
+
+`(I - Phi^T)` stays invertible on the padded system: padded nodes receive
+no forwarding mass (no real node ever picks them as next hop), so their
+rows can only point *into* the real block, adding no cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.structs import Apps, BIG, Network, Problem
+
+# Compute rate assigned to padded nodes: small enough that the marginal
+# compute cost C'(0) = 1/NU_PAD dominates any congested real marginal, while
+# C(0) = 0 keeps the padded contribution to J exactly zero.
+NU_PAD = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class PadInfo:
+    """Validity masks for one padded instance (or a stacked fleet of them).
+
+    node_mask : [V] float32, 1.0 on real nodes, 0.0 on padding
+    app_mask  : [A] float32, 1.0 on real apps, 0.0 on padding
+    """
+
+    node_mask: jax.Array
+    app_mask: jax.Array
+
+    @property
+    def n_real_nodes(self) -> int:
+        return int(jnp.sum(self.node_mask))
+
+    @property
+    def n_real_apps(self) -> int:
+        return int(jnp.sum(self.app_mask))
+
+
+jax.tree_util.register_dataclass(
+    PadInfo, data_fields=["node_mask", "app_mask"], meta_fields=[]
+)
+
+
+def pad_network(net: Network, n_nodes: int) -> Network:
+    """Pad a Network to `n_nodes` with disconnected, compute-dead nodes."""
+    v = net.n_nodes
+    if n_nodes < v:
+        raise ValueError(f"cannot pad {v} nodes down to {n_nodes}")
+    if n_nodes == v:
+        return net
+    pad = n_nodes - v
+    adj = jnp.pad(net.adj, ((0, pad), (0, pad)))
+    mu = jnp.pad(net.mu, ((0, pad), (0, pad)), constant_values=BIG)
+    nu = jnp.pad(net.nu, (0, pad), constant_values=NU_PAD)
+    return Network(adj=adj, mu=mu, nu=nu)
+
+
+def pad_apps(apps: Apps, n_apps: int) -> Apps:
+    """Pad an Apps set to `n_apps` with zero-rate, zero-size phantom apps."""
+    a = apps.n_apps
+    if n_apps < a:
+        raise ValueError(f"cannot pad {a} apps down to {n_apps}")
+    if n_apps == a:
+        return apps
+    pad = n_apps - a
+    return Apps(
+        src=jnp.pad(apps.src, (0, pad)),
+        dst=jnp.pad(apps.dst, (0, pad)),
+        lam=jnp.pad(apps.lam, (0, pad)),
+        L=jnp.pad(apps.L, ((0, pad), (0, 0))),
+        w=jnp.pad(apps.w, ((0, pad), (0, 0))),
+    )
+
+
+def pad_problem(
+    problem: Problem, n_nodes: int, n_apps: int
+) -> tuple[Problem, PadInfo]:
+    """Pad one problem to the (n_nodes, n_apps) envelope; returns masks."""
+    v, a = problem.net.n_nodes, problem.apps.n_apps
+    padded = Problem(
+        net=pad_network(problem.net, n_nodes),
+        apps=pad_apps(problem.apps, n_apps),
+        cost=problem.cost,
+    )
+    info = PadInfo(
+        node_mask=(jnp.arange(n_nodes) < v).astype(jnp.float32),
+        app_mask=(jnp.arange(n_apps) < a).astype(jnp.float32),
+    )
+    return padded, info
+
+
+def fleet_envelope(problems, round_to: int = 1) -> tuple[int, int]:
+    """Common (V, A) envelope of a fleet, optionally rounded up for alignment.
+
+    `round_to > 1` (e.g. 8) reduces the number of distinct padded shapes a
+    long-running control plane ever compiles for, at the price of a few
+    inert rows per instance.
+    """
+
+    def up(x: int) -> int:
+        return ((x + round_to - 1) // round_to) * round_to
+
+    v = up(max(p.net.n_nodes for p in problems))
+    a = up(max(p.apps.n_apps for p in problems))
+    return v, a
+
+
+def stack_problems(
+    problems, round_to: int = 1
+) -> tuple[Problem, PadInfo]:
+    """Pad every instance to the fleet envelope and stack into one pytree.
+
+    Returns (stacked_problem, stacked_info) whose array leaves all carry a
+    leading instance axis of length len(problems). Requires every cost
+    model to share `kind` (it is static metadata selecting a code path);
+    rho_max / w_comm / w_comp may differ per instance.
+    """
+    if not problems:
+        raise ValueError("empty fleet")
+    kinds = {p.cost.kind for p in problems}
+    if len(kinds) > 1:
+        raise ValueError(
+            f"fleet mixes cost kinds {sorted(kinds)}; CostModel.kind is "
+            "static metadata and must be uniform within one batch"
+        )
+    v, a = fleet_envelope(problems, round_to=round_to)
+    padded, infos = zip(*(pad_problem(p, v, a) for p in problems))
+    def stack(*xs):
+        # Leaves are arrays except the CostModel scalars, which may still be
+        # Python floats; asarray unifies both before stacking.
+        return jnp.stack([jnp.asarray(x) for x in xs])
+
+    stacked_problem = jax.tree_util.tree_map(stack, *padded)
+    stacked_info = jax.tree_util.tree_map(stack, *infos)
+    return stacked_problem, stacked_info

@@ -1,0 +1,288 @@
+"""Batched multi-scenario ALT solving over padded problem ensembles.
+
+`solve_fleet` pads a heterogeneous list of `Problem`s to a common (V, A)
+envelope (fleet/pad.py), stacks them into a single pytree, and runs the
+entire ALT pipeline — structured init, placement reassignment, forwarding
+sweeps, objective — vmapped over the instance axis, with a fixed-iteration
+`lax.scan` outer loop replacing `solve_alt`'s Python loop. The whole fleet
+solve is therefore ONE jitted computation: no per-instance dispatch, no
+retracing per topology, and dense [B, ...] linear algebra throughout.
+
+Equivalence contract: for every instance, the returned J matches the
+sequential `solve_alt` on the unpadded problem (same m_max / t_phi / alpha /
+tol / patience) up to float32 rounding. Early stopping is reproduced by
+masking: once an instance's best J has stalled for `patience` rounds it is
+frozen (its carried state stops updating) while the rest of the batch keeps
+iterating — identical results to a per-instance break, at fixed compute.
+
+An optional sharding hook splits the instance axis over local devices; with
+one device it is a no-op, so CPU development and multi-chip deployment use
+the same entry point (DESIGN.md section 9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.alt import linearize
+from ..core.flow import objective
+from ..core.forwarding import forwarding_update
+from ..core.placement import placement_update, structured_init
+from ..core.structs import Problem
+from .pad import PadInfo, stack_problems
+
+METHODS = ("ALT", "OneShot", "CongUnaware", "CoLocated")
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Per-instance results of one batched fleet solve.
+
+    J / J_comm / J_comp : [B] final (best-iterate) objective values
+    history             : [B, m_max + 1] outer-iteration J trace; entries
+                          after an instance froze are NaN
+    iters               : [B] outer iterations actually applied per instance
+    hosts               : [B, A, 2] chosen partition hosts (padded apps hold
+                          meaningless-but-harmless indices)
+    node_mask/app_mask  : [B, V] / [B, A] validity masks from padding
+    """
+
+    method: str
+    J: np.ndarray
+    J_comm: np.ndarray
+    J_comp: np.ndarray
+    history: np.ndarray
+    iters: np.ndarray
+    hosts: np.ndarray
+    node_mask: np.ndarray
+    app_mask: np.ndarray
+
+    @property
+    def n_instances(self) -> int:
+        return int(self.J.shape[0])
+
+    def per_instance(self) -> list[dict]:
+        out = []
+        for b in range(self.n_instances):
+            hist = self.history[b]
+            out.append(
+                {
+                    "J": float(self.J[b]),
+                    "J_comm": float(self.J_comm[b]),
+                    "J_comp": float(self.J_comp[b]),
+                    "history": [float(h) for h in hist[~np.isnan(hist)]],
+                    "iters": int(self.iters[b]),
+                    "hosts": self.hosts[b][self.app_mask[b] > 0].tolist(),
+                }
+            )
+        return out
+
+    def summary(self) -> str:
+        return (
+            f"fleet[{self.method}] B={self.n_instances} "
+            f"J: min={self.J.min():.3f} med={np.median(self.J):.3f} "
+            f"max={self.J.max():.3f}  iters: {self.iters.min()}-{self.iters.max()}"
+        )
+
+
+def _tree_where(pred, a, b):
+    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def _instance_result(problem: Problem, state) -> dict:
+    J, aux = objective(problem, state)
+    return {
+        "J": J,
+        "J_comm": aux["J_comm"],
+        "J_comp": aux["J_comp"],
+        "hosts": state.hosts(),
+    }
+
+
+def _solve_one_iterative(
+    problem: Problem,
+    *,
+    m_max: int,
+    t_phi: int,
+    alpha: float,
+    tol: float,
+    patience: int,
+    colocate: bool,
+    track_best: bool,
+    use_pallas: bool,
+) -> dict:
+    """Fixed-iteration scan variant of `solve_alt` for ONE instance.
+
+    Mirrors core/alt.py's loop body exactly (placement -> T_phi forwarding
+    sweeps -> objective, best-iterate tracking, tol/patience stall logic) but
+    with static trip count so it vmaps/jits as a single computation.
+    `track_best=False` reproduces `solve_oneshot`'s final-state semantics.
+    """
+    state0 = structured_init(problem, colocate=colocate, use_pallas=use_pallas)
+    J0, _ = objective(problem, state0)
+
+    def step(carry, _):
+        state, best_state, best_J, stall, iters, active = carry
+        nxt = placement_update(
+            problem, state, colocate=colocate, use_pallas=use_pallas
+        )
+        nxt = forwarding_update(problem, nxt, t_phi=t_phi, alpha=alpha)
+        J, _ = objective(problem, nxt)
+        # Stall bookkeeping against the best J *before* this round's update,
+        # exactly as in solve_alt.
+        improved = J < best_J * (1.0 - tol)
+        stall_nxt = jnp.where(improved, 0, stall + 1)
+        best_state_nxt = _tree_where(J < best_J, nxt, best_state)
+        best_J_nxt = jnp.minimum(J, best_J)
+        # Frozen instances (early-stopped under masking) keep everything.
+        state = _tree_where(active, nxt, state)
+        best_state = _tree_where(active, best_state_nxt, best_state)
+        best_J = jnp.where(active, best_J_nxt, best_J)
+        stall = jnp.where(active, stall_nxt, stall)
+        iters = iters + active.astype(jnp.int32)
+        hist = jnp.where(active, J, jnp.nan)
+        active = active & (stall < patience)
+        return (state, best_state, best_J, stall, iters, active), hist
+
+    carry0 = (state0, state0, J0, jnp.int32(0), jnp.int32(0), jnp.bool_(True))
+    (state, best_state, best_J, _, iters, _), hist = jax.lax.scan(
+        step, carry0, None, length=m_max
+    )
+    history = jnp.concatenate([J0[None], hist])
+    if track_best:
+        out = _instance_result(problem, best_state)
+    else:
+        out = _instance_result(problem, state)
+    out.update(history=history, iters=iters)
+    return out
+
+
+def _solve_one_congunaware(problem: Problem, *, use_pallas: bool) -> dict:
+    """Zero-iteration baseline: linear-cost init scored under true costs."""
+    state = structured_init(linearize(problem), use_pallas=use_pallas)
+    out = _instance_result(problem, state)
+    out.update(history=out["J"][None], iters=jnp.int32(0))
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "method", "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
+    ),
+)
+def _solve_fleet_stacked(
+    stacked: Problem,
+    *,
+    method: str,
+    m_max: int,
+    t_phi: int,
+    alpha: float,
+    tol: float,
+    patience: int,
+    use_pallas: bool,
+) -> dict:
+    """vmap the per-instance solver over the stacked instance axis."""
+    if method == "CongUnaware":
+        fn = functools.partial(_solve_one_congunaware, use_pallas=use_pallas)
+    else:
+        fn = functools.partial(
+            _solve_one_iterative,
+            m_max=1 if method == "OneShot" else m_max,
+            t_phi=t_phi,
+            alpha=alpha,
+            tol=tol,
+            patience=patience,
+            colocate=method == "CoLocated",
+            track_best=method != "OneShot",
+            use_pallas=use_pallas,
+        )
+    return jax.vmap(fn)(stacked)
+
+
+def _shard_over_devices(stacked: Problem, info: PadInfo, batch: int):
+    """Optional hook: lay the instance axis out over all local devices.
+
+    No-op unless there are >= 2 devices and the batch divides evenly; the
+    jitted fleet solve then runs SPMD over the instance axis with no code
+    changes (batch parallelism has no cross-instance communication).
+    """
+    devices = jax.devices()
+    n_dev = len(devices)
+    if n_dev < 2 or batch % n_dev != 0:
+        return stacked, info
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.asarray(devices), ("fleet",))
+    sharding = NamedSharding(mesh, PartitionSpec("fleet"))
+    put = lambda x: jax.device_put(x, sharding)
+    return jax.tree_util.tree_map(put, (stacked, info))
+
+
+def solve_fleet(
+    problems,
+    *,
+    method: str = "ALT",
+    m_max: int = 30,
+    t_phi: int = 10,
+    alpha: float = 0.5,
+    tol: float = 1e-3,
+    patience: int = 4,
+    round_to: int = 1,
+    shard: bool = False,
+    use_pallas: bool = False,
+) -> FleetResult:
+    """Solve a heterogeneous fleet of problems as one batched computation.
+
+    problems : list of `Problem` (arbitrary mixed sizes; padded internally)
+    method   : "ALT" | "OneShot" | "CongUnaware" | "CoLocated", matching the
+               sequential solvers in core/alt.py instance-for-instance
+    round_to : round the padded (V, A) envelope up to this multiple so a
+               long-running control plane compiles few distinct shapes
+    shard    : lay the instance axis out over local devices when possible
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    stacked, info = stack_problems(problems, round_to=round_to)
+    if shard:
+        stacked, info = _shard_over_devices(stacked, info, len(problems))
+    out = _solve_fleet_stacked(
+        stacked,
+        method=method,
+        m_max=m_max,
+        t_phi=t_phi,
+        alpha=alpha,
+        tol=tol,
+        patience=patience,
+        use_pallas=use_pallas,
+    )
+    return FleetResult(
+        method=method,
+        J=np.asarray(out["J"]),
+        J_comm=np.asarray(out["J_comm"]),
+        J_comp=np.asarray(out["J_comp"]),
+        history=np.asarray(out["history"]),
+        iters=np.asarray(out["iters"]),
+        hosts=np.asarray(out["hosts"]),
+        node_mask=np.asarray(info.node_mask),
+        app_mask=np.asarray(info.app_mask),
+    )
+
+
+def solve_sequential(problems, *, method: str = "ALT", **kw) -> list:
+    """Reference path: the pre-fleet per-instance Python loop.
+
+    Used by benchmarks/fleet_bench.py for the batched-vs-sequential speedup
+    and by tests for the equivalence guarantee."""
+    from ..core.alt import ALL_METHODS
+
+    fn = ALL_METHODS[method]
+    if method == "OneShot":
+        kw = {k: v for k, v in kw.items() if k in ("t_phi", "alpha", "use_pallas")}
+    elif method == "CongUnaware":
+        kw = {k: v for k, v in kw.items() if k in ("use_pallas",)}
+    return [fn(p, **kw) for p in problems]

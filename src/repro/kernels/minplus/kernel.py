@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Renamed TPUCompilerParams -> CompilerParams across JAX releases.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 BIG = 1e18
 DEFAULT_BLOCK = 128
 KINNER = 8
@@ -87,7 +90,7 @@ def minplus_matmul_pallas(
         ],
         out_specs=pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

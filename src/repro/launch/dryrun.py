@@ -207,7 +207,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
 
-            cost = dict(compiled.cost_analysis() or {})
+            # cost_analysis() returns a dict on recent JAX, a 1-element list
+            # of dicts on older releases; accept both.
+            ca = compiled.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0] if ca else {}
+            cost = dict(ca)
             cost = {k: float(v) for k, v in cost.items() if np.isscalar(v)}
             try:
                 ma = compiled.memory_analysis()

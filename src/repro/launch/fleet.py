@@ -1,0 +1,91 @@
+"""Fleet control-plane CLI: batched re-optimization of scenario ensembles.
+
+The serving-side counterpart of `launch/serve.py`: where serve.py executes
+one node's DNN partition, this entry point is the *control plane* that
+(re)places partitions and routes for a whole fleet of edge deployments in
+one batched solve (DESIGN.md section 9).
+
+Examples (CPU):
+  PYTHONPATH=src python -m repro.launch.fleet --families erdos_renyi,iot_hierarchy \
+      --instances 16 --seed 7 --m-max 8
+  PYTHONPATH=src python -m repro.launch.fleet --scenario iot --load-grid 0.4,0.8,1.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import SCENARIOS
+from repro.fleet import FAMILIES, load_grid, sample_fleet, solve_fleet
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--families",
+        default=None,
+        help=f"comma-separated generator families ({','.join(FAMILIES)})",
+    )
+    ap.add_argument("--instances", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--scenario",
+        choices=list(SCENARIOS),
+        default=None,
+        help="use one paper scenario instead of sampled families",
+    )
+    ap.add_argument(
+        "--load-grid",
+        default=None,
+        help="comma-separated load scales applied to --scenario",
+    )
+    from repro.fleet import METHODS
+
+    ap.add_argument("--method", choices=list(METHODS), default="ALT")
+    ap.add_argument("--m-max", type=int, default=30)
+    ap.add_argument("--t-phi", type=int, default=10)
+    ap.add_argument("--round-to", type=int, default=8)
+    ap.add_argument("--shard", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.scenario:
+        scales = (
+            [float(s) for s in args.load_grid.split(",")]
+            if args.load_grid
+            else [1.0] * args.instances
+        )
+        fleet = load_grid(SCENARIOS[args.scenario], scales)
+    else:
+        families = args.families.split(",") if args.families else None
+        fleet = sample_fleet(args.instances, families=families, seed=args.seed)
+
+    t0 = time.time()
+    res = solve_fleet(
+        fleet,
+        method=args.method,
+        m_max=args.m_max,
+        t_phi=args.t_phi,
+        round_to=args.round_to,
+        shard=args.shard,
+    )
+    dt = time.time() - t0
+    print(
+        json.dumps(
+            {
+                "method": res.method,
+                "instances": res.n_instances,
+                "wall_s": round(dt, 2),
+                "inst_per_s": round(res.n_instances / dt, 3),
+                "summary": res.summary(),
+                "per_instance": res.per_instance(),
+            },
+            indent=1,
+        ),
+        flush=True,
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,56 @@
+"""Optional-dependency shims shared by the test modules.
+
+`hypothesis` is a [test] extra, not a runtime dependency, and some minimal
+environments (e.g. the benchmark container) don't ship it. Importing this
+module instead of hypothesis directly keeps collection working everywhere:
+when hypothesis is available the real `given` / `settings` / `st` are
+re-exported unchanged; when it is absent, `given` turns the decorated test
+into a clean `pytest.skip`, and `settings` / `st` become inert placeholders
+whose strategy objects are never drawn from.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped(*a, **k):
+                pass
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    class _Strategy:
+        """Placeholder strategy: only ever passed around, never drawn."""
+
+        def __init__(self, name, args, kwargs):
+            self._repr = f"st.{name}{args}{kwargs or ''}"
+
+        def __repr__(self):
+            return self._repr
+
+    class _StrategiesStub:
+        def __getattr__(self, name):
+            def make(*args, **kwargs):
+                return _Strategy(name, args, kwargs)
+
+            return make
+
+    st = _StrategiesStub()

@@ -1,0 +1,214 @@
+"""Fleet engine tests: padding inertness, batched-vs-sequential equivalence,
+and the scenario-fleet generator (repro.fleet)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    iot,
+    mesh,
+    objective,
+    random_connected,
+    stage_traffic,
+    structured_init,
+)
+from repro.core.alt import solve_alt
+from repro.core.flow import loads
+from repro.fleet import (
+    FAMILIES,
+    METHODS,
+    fleet_envelope,
+    pad_problem,
+    sample_fleet,
+    solve_fleet,
+    solve_sequential,
+    stack_problems,
+)
+
+SOLVE_KW = dict(m_max=6, t_phi=5, alpha=0.5, tol=1e-3, patience=4)
+
+
+def _mixed_fleet():
+    return [
+        iot(),
+        mesh(),
+        random_connected(12, 5, seed=3),
+        random_connected(20, 8, seed=4),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Padding: masks, envelope, and real-coordinate preservation
+# ---------------------------------------------------------------------------
+class TestPadding:
+    def test_envelope_and_masks(self):
+        fleet = _mixed_fleet()
+        v, a = fleet_envelope(fleet)
+        assert v == 25 and a == 40  # mesh dominates both axes
+        v8, a8 = fleet_envelope(fleet, round_to=8)
+        assert v8 == 32 and a8 == 40
+        padded, info = pad_problem(fleet[2], v, a)
+        assert padded.net.n_nodes == v and padded.apps.n_apps == a
+        assert info.n_real_nodes == 12 and info.n_real_apps == 5
+
+    def test_real_submatrices_preserved(self):
+        p = iot()
+        padded, info = pad_problem(p, 24, 31)
+        v, a = p.net.n_nodes, p.apps.n_apps
+        np.testing.assert_array_equal(padded.net.adj[:v, :v], p.net.adj)
+        np.testing.assert_array_equal(padded.net.mu[:v, :v], p.net.mu)
+        np.testing.assert_array_equal(padded.net.nu[:v], p.net.nu)
+        np.testing.assert_array_equal(padded.apps.lam[:a], p.apps.lam)
+        # padded nodes are disconnected, padded apps rate-free
+        assert float(jnp.sum(padded.net.adj[v:, :])) == 0.0
+        assert float(jnp.sum(padded.net.adj[:, v:])) == 0.0
+        assert float(jnp.sum(padded.apps.lam[a:])) == 0.0
+
+    def test_padded_coordinates_carry_zero_traffic(self):
+        """The inertness contract: padding must not move any traffic."""
+        p = iot()
+        v, a = p.net.n_nodes, p.apps.n_apps
+        padded, info = pad_problem(p, v + 7, a + 5)
+        s = structured_init(padded)
+        t = stage_traffic(padded, s)
+        # padded apps: zero traffic everywhere; padded nodes: zero traffic
+        # for every app and stage
+        assert float(jnp.max(jnp.abs(t[a:]))) == 0.0
+        assert float(jnp.max(jnp.abs(t[:, :, v:]))) == 0.0
+        F, G = loads(padded, s, t)
+        assert float(jnp.max(jnp.abs(F[v:, :]))) == 0.0
+        assert float(jnp.max(jnp.abs(F[:, v:]))) == 0.0
+        assert float(jnp.max(jnp.abs(G[v:]))) == 0.0
+        # objective unchanged by padding
+        J_pad, _ = objective(padded, s)
+        J_ref, _ = objective(p, structured_init(p))
+        np.testing.assert_allclose(float(J_pad), float(J_ref), rtol=1e-5)
+
+    def test_padded_apps_stay_inert_under_sweeps(self):
+        """Regression: phantom apps must carry zero forwarding mass.
+
+        Without app_live_mask, forwarding sweeps drive the padded apps'
+        phi-support into min-index 2-cycles, (I - Phi^T) goes singular, and
+        0 * NaN poisons J. Exercise several full outer rounds on a padded
+        problem and require exact zeros + finite objectives throughout."""
+        from repro.core import forwarding_update, placement_update
+
+        p = random_connected(21, 19, seed=13)
+        padded, info = pad_problem(p, 28, 30)
+        a = p.apps.n_apps
+        s = structured_init(padded)
+        for _ in range(4):
+            s = placement_update(padded, s)
+            s = forwarding_update(padded, s, t_phi=5)
+            assert float(jnp.max(jnp.abs(s.phi[a:]))) == 0.0
+            J, _ = objective(padded, s)
+            assert np.isfinite(float(J))
+
+    def test_padded_hosts_stay_real_through_solve(self):
+        p = random_connected(10, 4, seed=5)
+        res = solve_fleet([p, iot()], **SOLVE_KW)
+        for b in range(2):
+            n_real = int(res.node_mask[b].sum())
+            real_hosts = res.hosts[b][res.app_mask[b] > 0]
+            assert real_hosts.max() < n_real
+
+    def test_stacking_rejects_mixed_cost_kind(self):
+        from repro.core import CostModel
+
+        with pytest.raises(ValueError, match="kind"):
+            stack_problems([iot(), iot(cost=CostModel(kind="linear"))])
+
+
+# ---------------------------------------------------------------------------
+# Batched solve == sequential solve, per instance
+# ---------------------------------------------------------------------------
+class TestEquivalence:
+    def test_alt_matches_sequential_on_mixed_fleet(self):
+        fleet = _mixed_fleet()
+        res = solve_fleet(fleet, **SOLVE_KW)
+        seq = solve_sequential(fleet, **SOLVE_KW)
+        for b in range(len(fleet)):
+            np.testing.assert_allclose(res.J[b], seq[b].J, rtol=1e-3)
+            np.testing.assert_allclose(res.J_comm[b], seq[b].J_comm, rtol=1e-3)
+            np.testing.assert_allclose(res.J_comp[b], seq[b].J_comp, rtol=1e-3)
+
+    def test_early_stop_masking_matches_sequential_breaks(self):
+        """With m_max past convergence, the masked scan must reproduce the
+        sequential loop's per-instance break points exactly."""
+        fleet = [iot(), random_connected(14, 6, seed=11)]
+        kw = dict(m_max=20, t_phi=5, alpha=0.5, tol=1e-3, patience=3)
+        res = solve_fleet(fleet, **kw)
+        seq = solve_sequential(fleet, **kw)
+        for b in range(len(fleet)):
+            np.testing.assert_allclose(res.J[b], seq[b].J, rtol=1e-3)
+            assert int(res.iters[b]) == seq[b].iters
+            hist = res.history[b]
+            hist = hist[~np.isnan(hist)]
+            np.testing.assert_allclose(hist, seq[b].history, rtol=1e-3)
+
+    @pytest.mark.parametrize("method", [m for m in METHODS if m != "ALT"])
+    def test_baseline_methods_match_sequential(self, method):
+        fleet = [iot(), mesh(), random_connected(12, 5, seed=3)]
+        res = solve_fleet(fleet, method=method, **SOLVE_KW)
+        seq = solve_sequential(fleet, method=method, **SOLVE_KW)
+        for b in range(len(fleet)):
+            np.testing.assert_allclose(res.J[b], seq[b].J, rtol=1e-3)
+
+    def test_round_to_envelope_does_not_change_results(self):
+        fleet = [iot(), random_connected(12, 5, seed=3)]
+        r1 = solve_fleet(fleet, **SOLVE_KW)
+        r8 = solve_fleet(fleet, round_to=8, **SOLVE_KW)
+        np.testing.assert_allclose(r1.J, r8.J, rtol=1e-3)
+
+    def test_per_instance_reporting(self):
+        fleet = _mixed_fleet()
+        res = solve_fleet(fleet, **SOLVE_KW)
+        rows = res.per_instance()
+        assert len(rows) == len(fleet)
+        for row, p in zip(rows, fleet):
+            assert len(row["hosts"]) == p.apps.n_apps
+            assert np.isfinite(row["J"])
+            assert row["J"] > 0.0
+            assert row["J"] <= row["history"][0]  # best-iterate never regresses
+
+
+# ---------------------------------------------------------------------------
+# Scenario-fleet generator
+# ---------------------------------------------------------------------------
+class TestGenerator:
+    @pytest.mark.parametrize("family", list(FAMILIES))
+    def test_families_connected_and_reproducible(self, family):
+        import networkx as nx
+
+        make = FAMILIES[family]
+        if family in ("iot_hierarchy", "perturbed_geant"):
+            p1, p2 = make(seed=9), make(seed=9)
+            p3 = make(seed=10)
+        else:
+            p1, p2 = make(16, 8, seed=9), make(16, 8, seed=9)
+            p3 = make(16, 8, seed=10)
+        np.testing.assert_array_equal(np.asarray(p1.net.adj), np.asarray(p2.net.adj))
+        np.testing.assert_array_equal(np.asarray(p1.apps.lam), np.asarray(p2.apps.lam))
+        # different seed -> different instance (rates always re-drawn)
+        assert not np.array_equal(np.asarray(p1.net.mu), np.asarray(p3.net.mu))
+        g = nx.from_numpy_array(np.asarray(p1.net.adj))
+        assert nx.is_connected(g)
+
+    def test_sample_fleet_solvable_end_to_end(self):
+        fleet = sample_fleet(8, seed=3)
+        assert len(fleet) == 8
+        assert len({(p.net.n_nodes, p.apps.n_apps) for p in fleet}) > 1
+        res = solve_fleet(fleet, m_max=4, t_phi=4)
+        assert np.all(np.isfinite(res.J))
+        # every instance improves on (or at least never regresses from) init
+        first = res.history[:, 0]
+        assert np.all(res.J <= first * (1.0 + 1e-6))
+
+    def test_grids(self):
+        from repro.fleet import eta_grid, load_grid
+
+        lg = load_grid(iot, (0.5, 1.0))
+        assert float(np.sum(lg[1].apps.lam)) > float(np.sum(lg[0].apps.lam))
+        eg = eta_grid(iot, (0.2, 0.8))
+        assert float(eg[0].cost.w_comm) == pytest.approx(0.2)
+        assert float(eg[0].cost.w_comp) == pytest.approx(0.8)

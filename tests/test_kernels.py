@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional_deps import given, settings, st
 
 from repro.kernels.minplus.kernel import minplus_matmul_pallas
 from repro.kernels.minplus.ref import apsp_ref, minplus_matmul_ref
