@@ -1,52 +1,75 @@
 """Fleet engine benchmark: batched multi-scenario solving vs the sequential
-per-instance loop (the repo's pre-fleet path).
+per-instance loop, plus the nilpotent-propagation solver axis.
 
-Workload: a fresh heterogeneous scenario ensemble (mixed ER / BA / IoT-tree /
-perturbed-GEANT topologies, varied sizes and loads) — the control-plane
-situation where shapes have not been seen before. The sequential loop pays a
-retrace + compile for every distinct (V, A) shape plus per-iteration dispatch;
-the fleet engine pads to one envelope and compiles ONE batched program.
-Both paths are timed end-to-end from cold caches (symmetric: each gets
-`jax.clear_caches()` first), then re-timed warm for the steady-state
-re-optimization rate.
+Section 1 (batched-vs-sequential): a fresh heterogeneous scenario ensemble
+(mixed ER / BA / IoT-tree / perturbed-GEANT topologies, varied sizes and
+loads) — the control-plane situation where shapes have not been seen before.
+The sequential loop pays a retrace + compile for every distinct (V, A) shape
+plus per-iteration dispatch; the fleet engine pads to one envelope and
+compiles ONE batched program. Both paths are timed end-to-end from cold
+caches (symmetric: each gets `jax.clear_caches()` first), then re-timed warm
+for the steady-state re-optimization rate.
+
+Section 2 (--solver axis): the ALT hot loop's linear fixed points on the
+propagation path (`neumann`, O(H V^2) hops) vs dense LU (O(V^3)), measured
+as warm per-outer-round wall time on a V >= 64 fleet — the regime where the
+LU cost dominates the control plane (ISSUE 2 / DESIGN.md section 10).
+
+Section 3 (parity): Neumann-vs-LU objective agreement across all four
+methods on the paper's four topologies.
 
 Checks enforced:
-  * per-instance J equivalence between the two paths (rtol 1e-3)
-  * >= 2x cold end-to-end speedup at batch >= 8 on CPU
+  * per-instance J equivalence between batched and sequential (rtol 1e-3)
+  * >= 2x cold end-to-end batched speedup at batch >= 6 on CPU
+  * >= 2x warm per-outer-round Neumann speedup over LU at V >= 64 on CPU
+  * Neumann == LU objectives to rtol 1e-3 for all methods x topologies
 """
 from __future__ import annotations
 
+import argparse
+import os
 import time
 
 import jax
 import numpy as np
 
-from repro.fleet import sample_fleet, solve_fleet, solve_sequential
+from repro.core import SCENARIOS
+from repro.fleet import METHODS, sample_fleet, solve_fleet, solve_sequential
+from repro.fleet.generator import erdos_renyi
 
-BATCH = 12
-SOLVE_KW = dict(m_max=6, t_phi=5)
+_SMALL = bool(os.environ.get("SCALE_SMALL"))
+
+BATCH = 6 if _SMALL else 12
+SOLVE_KW = dict(m_max=3, t_phi=3) if _SMALL else dict(m_max=6, t_phi=5)
+
+# Solver-axis workload: the acceptance regime (V >= 64).
+SOLVER_V = 64
+SOLVER_BATCH = 2 if _SMALL else 4
+SOLVER_KW = dict(m_max=2 if _SMALL else 4, t_phi=5, patience=10)
+SOLVER_REPS = 2 if _SMALL else 3
 
 
-def run(print_fn=print) -> dict:
+def _bench_batched_vs_sequential(print_fn, solver: str) -> dict:
     fleet = sample_fleet(BATCH, seed=2026)
     shapes = {(p.net.n_nodes, p.apps.n_apps) for p in fleet}
+    kw = dict(solver=solver, **SOLVE_KW)
 
     # --- fresh-ensemble (cold) end-to-end, sequential then batched ---------
     jax.clear_caches()
     t0 = time.time()
-    seq = solve_sequential(fleet, **SOLVE_KW)
+    seq = solve_sequential(fleet, **kw)
     t_seq_cold = time.time() - t0
     t0 = time.time()
-    seq2 = solve_sequential(fleet, **SOLVE_KW)
+    seq2 = solve_sequential(fleet, **kw)
     t_seq_warm = time.time() - t0
     del seq2
 
     jax.clear_caches()
     t0 = time.time()
-    res = solve_fleet(fleet, **SOLVE_KW)
+    res = solve_fleet(fleet, **kw)
     t_fleet_cold = time.time() - t0
     t0 = time.time()
-    res2 = solve_fleet(fleet, **SOLVE_KW)
+    res2 = solve_fleet(fleet, **kw)
     t_fleet_warm = time.time() - t0
 
     # --- equivalence guarantee --------------------------------------------
@@ -58,6 +81,7 @@ def run(print_fn=print) -> dict:
     warm_speedup = t_seq_warm / t_fleet_warm
     out = {
         "batch": BATCH,
+        "solver": solver,
         "distinct_shapes": len(shapes),
         "cold": {
             "sequential_s": round(t_seq_cold, 2),
@@ -75,7 +99,7 @@ def run(print_fn=print) -> dict:
         },
     }
     print_fn(
-        f"fleet,B={BATCH} shapes={len(shapes)} "
+        f"fleet,B={BATCH} shapes={len(shapes)} solver={solver} "
         f"cold: seq={t_seq_cold:6.1f}s fleet={t_fleet_cold:6.1f}s "
         f"({out['cold']['fleet_inst_per_s']:.2f} inst/s) speedup={cold_speedup:.2f}x"
     )
@@ -83,7 +107,7 @@ def run(print_fn=print) -> dict:
         f"fleet,B={BATCH} warm: seq={t_seq_warm:6.2f}s fleet={t_fleet_warm:6.2f}s "
         f"({out['warm']['fleet_inst_per_s']:.2f} inst/s) speedup={warm_speedup:.2f}x"
     )
-    assert BATCH >= 8
+    assert BATCH >= 6
     assert cold_speedup >= 2.0, (
         f"fleet engine must be >= 2x faster end-to-end on a fresh ensemble "
         f"(got {cold_speedup:.2f}x)"
@@ -91,5 +115,87 @@ def run(print_fn=print) -> dict:
     return out
 
 
+def _bench_solver_axis(print_fn) -> dict:
+    """Warm per-outer-round cost of the two fixed-point solvers at V >= 64."""
+    fleet = [erdos_renyi(SOLVER_V, 12, seed=s) for s in range(SOLVER_BATCH)]
+    rounds = SOLVER_KW["m_max"]
+    per_round = {}
+    J = {}
+    for solver in ("neumann", "lu"):
+        solve_fleet(fleet, solver=solver, **SOLVER_KW)  # compile + warm
+        best = np.inf
+        for _ in range(SOLVER_REPS):
+            t0 = time.time()
+            res = solve_fleet(fleet, solver=solver, **SOLVER_KW)
+            best = min(best, time.time() - t0)
+        per_round[solver] = best / rounds
+        J[solver] = np.asarray(res.J)
+        print_fn(
+            f"fleet,solver={solver:8s} V={SOLVER_V} B={SOLVER_BATCH} "
+            f"warm={best:.3f}s  per-round={per_round[solver] * 1e3:.1f}ms"
+        )
+    speedup = per_round["lu"] / per_round["neumann"]
+    np.testing.assert_allclose(J["neumann"], J["lu"], rtol=1e-3)
+    hop_bound = fleet[0].hop_bound
+    print_fn(
+        f"fleet,solver-axis V={SOLVER_V} hop_bound={hop_bound} "
+        f"warm per-round speedup neumann/lu = {speedup:.2f}x"
+    )
+    assert speedup >= 2.0, (
+        f"neumann must be >= 2x faster per warm outer round than LU at "
+        f"V={SOLVER_V} (got {speedup:.2f}x)"
+    )
+    return {
+        "V": SOLVER_V,
+        "batch": SOLVER_BATCH,
+        "hop_bound": hop_bound,
+        "per_round_ms": {k: round(v * 1e3, 2) for k, v in per_round.items()},
+        "warm_per_round_speedup": round(speedup, 2),
+    }
+
+
+def _bench_solver_parity(print_fn) -> dict:
+    """Neumann-vs-LU objective parity: 4 methods x 4 paper topologies."""
+    fleet = [make() for make in SCENARIOS.values()]
+    kw = dict(m_max=3 if _SMALL else 6, t_phi=5)
+    out = {}
+    for method in METHODS:
+        Js = {}
+        for solver in ("neumann", "lu"):
+            res = solve_fleet(fleet, method=method, solver=solver, **kw)
+            Js[solver] = np.asarray(res.J)
+        np.testing.assert_allclose(Js["neumann"], Js["lu"], rtol=1e-3)
+        rel = np.max(
+            np.abs(Js["neumann"] - Js["lu"]) / np.maximum(np.abs(Js["lu"]), 1e-30)
+        )
+        out[method] = {"max_rel_diff": float(rel)}
+        print_fn(
+            f"fleet,parity method={method:12s} scenarios={list(SCENARIOS)} "
+            f"max|J_ne - J_lu|/J_lu = {rel:.2e}  (rtol 1e-3 OK)"
+        )
+    return out
+
+
+def run(print_fn=print, solver: str = "neumann") -> dict:
+    out = {"engine": _bench_batched_vs_sequential(print_fn, solver)}
+    out["solver_axis"] = _bench_solver_axis(print_fn)
+    out["solver_parity"] = _bench_solver_parity(print_fn)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--solver",
+        choices=("neumann", "lu"),
+        default="neumann",
+        help="fixed-point solver for the batched-vs-sequential section "
+        "(the solver-axis section always measures both)",
+    )
+    args = ap.parse_args()
+    run(solver=args.solver)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

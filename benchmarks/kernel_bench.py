@@ -13,6 +13,8 @@ from repro.kernels.flash_attention.ref import attention_chunked, attention_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.minplus.kernel import minplus_matmul_pallas
 from repro.kernels.minplus.ops import apsp
+from repro.kernels.neumann import lu_solve_ref, neumann_solve
+from repro.kernels.neumann.kernel import neumann_solve_pallas
 
 
 def _time(fn, *args, reps=5):
@@ -35,6 +37,41 @@ def run(print_fn=print) -> dict:
         us = _time(jax.jit(apsp), jnp.asarray(w))
         out[f"apsp_v{v}_us"] = us
         print_fn(f"kernel,apsp v={v:4d}  {us:10.1f} us/call")
+
+    # neumann propagation solve vs dense LU — the ALT hot-loop fixed point.
+    # Workload shape: [A, V, V] nilpotent operators (SP-tree-like support,
+    # longest chain ~ diameter), one RHS per app.
+    for v in (64, 128):
+        a_apps, hops = 12, 10
+        m = np.triu(rng.uniform(0.0, 1.0, (a_apps, v, v)).astype(np.float32), 1)
+        m *= rng.rand(a_apps, v, v) < (2.0 / v)  # sparse loop-free support
+        rhs = rng.uniform(0.0, 2.0, (a_apps, v)).astype(np.float32)
+        m_j, rhs_j = jnp.asarray(m), jnp.asarray(rhs)
+        ne = jax.jit(lambda mm, bb: neumann_solve(mm, bb, hops=hops))
+        lu = jax.jit(lu_solve_ref)
+        us_ne = _time(ne, m_j, rhs_j)
+        us_lu = _time(lu, m_j, rhs_j)
+        err = float(jnp.max(jnp.abs(ne(m_j, rhs_j) - lu(m_j, rhs_j))))
+        out[f"neumann_v{v}_us"] = us_ne
+        out[f"lu_v{v}_us"] = us_lu
+        out[f"neumann_v{v}_speedup"] = us_lu / us_ne
+        print_fn(
+            f"kernel,neumann v={v:4d} A={a_apps} hops<={hops}  "
+            f"neumann={us_ne:8.1f}us lu={us_lu:8.1f}us "
+            f"speedup={us_lu / us_ne:.2f}x err={err:.2e}"
+        )
+        assert err < 1e-3
+
+    # neumann Pallas (interpret) vs LU oracle: correctness of the fused hops.
+    m = np.triu(rng.uniform(0.0, 1.0, (4, 48, 48)).astype(np.float32), 1)
+    m *= rng.rand(4, 48, 48) < 0.2
+    rhs = rng.uniform(0.0, 2.0, (4, 48)).astype(np.float32)
+    got = neumann_solve_pallas(jnp.asarray(m), jnp.asarray(rhs), hops=49, interpret=True)
+    want = lu_solve_ref(jnp.asarray(m), jnp.asarray(rhs))
+    err = float(jnp.max(jnp.abs(got - want)) / (jnp.max(jnp.abs(want)) + 1e-30))
+    out["neumann_interpret_err"] = err
+    print_fn(f"kernel,neumann_pallas interpret rel err={err:.2e}")
+    assert err < 1e-5
 
     # minplus Pallas (interpret) vs oracle: correctness + relative cost.
     a = jnp.asarray(rng.uniform(0, 5, (256, 256)).astype(np.float32))

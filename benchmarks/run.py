@@ -2,11 +2,18 @@
 the framework-level benches. Prints `name,<payload>` lines and exits nonzero
 if any paper claim fails.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4,...] [--json-out]
+
+`--json-out` persists each bench's result dict as `BENCH_<name>.json` at the
+repo root (commit hash + timings + speedups), so the perf trajectory is
+tracked PR-over-PR and CI can upload the files as artifacts.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import subprocess
 import sys
 import time
 import traceback
@@ -31,14 +38,48 @@ BENCHES = {
     "fig5": fig5_tradeoff.run,         # comm/comp tradeoff (batched fleet)
     "kernels": kernel_bench.run,       # Pallas kernels vs oracles
     "scale": scale_control_plane.run,  # beyond-paper: fleet-scale control
-    "fleet": fleet_bench.run,          # batched-vs-sequential fleet engine
+    "fleet": fleet_bench.run,          # batched-vs-sequential + solver axis
     "roofline": roofline.run,          # informational; needs dry-run artifacts
 }
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _commit_hash() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def write_json(name: str, payload, elapsed_s: float) -> pathlib.Path:
+    """Persist one bench result as BENCH_<name>.json at the repo root."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    record = {
+        "bench": name,
+        "commit": _commit_hash(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "elapsed_s": round(elapsed_s, 2),
+        "result": payload,
+    }
+    path.write_text(json.dumps(record, indent=1, default=str) + "\n")
+    return path
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument(
+        "--json-out",
+        action="store_true",
+        help="write BENCH_<name>.json (commit hash + result dict) per bench",
+    )
     args = ap.parse_args()
     names = list(BENCHES) if not args.only else args.only.split(",")
     failures = []
@@ -46,8 +87,12 @@ def main() -> int:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
         try:
-            BENCHES[name]()
-            print(f"=== {name} done ({time.time() - t0:.1f}s) ===", flush=True)
+            result = BENCHES[name]()
+            elapsed = time.time() - t0
+            if args.json_out and result is not None:
+                path = write_json(name, result, elapsed)
+                print(f"wrote {path.relative_to(REPO_ROOT)}", flush=True)
+            print(f"=== {name} done ({elapsed:.1f}s) ===", flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()

@@ -10,9 +10,20 @@ from .structs import (  # noqa: F401
     State,
     app_live_mask,
     forwarding_mass,
+    infer_hop_bound,
+    with_hop_bound,
 )
-from .flow import loads, objective, stage_traffic, total_absorbed  # noqa: F401
+from .flow import (  # noqa: F401
+    SOLVERS,
+    loads,
+    objective,
+    objective_from_loads,
+    stage_solve,
+    stage_traffic,
+    total_absorbed,
+)
 from .forwarding import forwarding_sweep, forwarding_update  # noqa: F401
+from .marginals import cost_to_go, link_marginals, round_eval  # noqa: F401
 from .placement import placement_update, repair_phi, structured_init  # noqa: F401
 from .alt import (  # noqa: F401
     ALL_METHODS,

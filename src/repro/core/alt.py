@@ -7,6 +7,13 @@
 
 All four share the structured initialization so comparisons isolate exactly
 one design axis each (alternation / congestion awareness / split flexibility).
+
+Per-round dataflow (DESIGN.md section 10): each round ends with ONE full
+marginal evaluation (`round_eval`) whose objective read-out drives the
+history/stall logic and whose (q, dp, kappa, t, F, G) tuple is handed to the
+next round's placement sweep — placement and the round-final objective no
+longer redo the same traffic solve. `solver` selects the fixed-point path:
+"neumann" (default, hop-capped propagation) or "lu" (dense reference).
 """
 from __future__ import annotations
 
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 
 from .flow import objective
 from .forwarding import forwarding_update
+from .marginals import round_eval
 from .placement import placement_update, structured_init
 from .structs import CostModel, Problem, State
 
@@ -37,12 +45,11 @@ class Result:
         )
 
 
-def _eval(problem: Problem, state: State, name: str, history, iters) -> Result:
-    J, aux = objective(problem, state)
+def _result(problem, state, aux, name, history, iters) -> Result:
     return Result(
         name=name,
         state=state,
-        J=float(J),
+        J=float(aux["J"]),
         J_comm=float(aux["J_comm"]),
         J_comp=float(aux["J_comp"]),
         history=[float(h) for h in history],
@@ -60,6 +67,7 @@ def solve_alt(
     patience: int = 4,
     colocate: bool = False,
     use_pallas: bool = False,
+    solver: str = "neumann",
     name: str = "ALT",
 ) -> Result:
     """The full alternating method (Algorithm 1), with best-iterate tracking.
@@ -70,17 +78,24 @@ def solve_alt(
     when the best J stops improving by tol for `patience` rounds.
     """
     state = structured_init(problem, colocate=colocate, use_pallas=use_pallas)
-    J, _ = objective(problem, state)
-    best_state, best_J = state, float(J)
+    J, aux = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
+    best_state, best_J, best_aux = state, float(J), aux
     history = [float(J)]
     iters = 0
     stall = 0
     for m in range(m_max):
         state = placement_update(
-            problem, state, colocate=colocate, use_pallas=use_pallas
+            problem,
+            state,
+            aux["ctg"],
+            colocate=colocate,
+            use_pallas=use_pallas,
+            solver=solver,
         )
-        state = forwarding_update(problem, state, t_phi=t_phi, alpha=alpha)
-        J, _ = objective(problem, state)
+        state = forwarding_update(
+            problem, state, t_phi=t_phi, alpha=alpha, solver=solver
+        )
+        J, aux = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
         jf = float(J)
         history.append(jf)
         iters = m + 1
@@ -89,22 +104,29 @@ def solve_alt(
         else:
             stall += 1
         if jf < best_J:
-            best_state, best_J = state, jf
+            best_state, best_J, best_aux = state, jf, aux
         if stall >= patience:
             break
-    return _eval(problem, best_state, name, history, iters)
+    return _result(problem, best_state, best_aux, name, history, iters)
 
 
 def solve_oneshot(
-    problem: Problem, *, t_phi: int = 10, alpha: float = 0.5, use_pallas: bool = False
+    problem: Problem,
+    *,
+    t_phi: int = 10,
+    alpha: float = 0.5,
+    use_pallas: bool = False,
+    solver: str = "neumann",
 ) -> Result:
     """One placement/forwarding round: isolates the value of alternation."""
     state = structured_init(problem, use_pallas=use_pallas)
-    J0, _ = objective(problem, state)
-    state = placement_update(problem, state, use_pallas=use_pallas)
-    state = forwarding_update(problem, state, t_phi=t_phi, alpha=alpha)
-    J1, _ = objective(problem, state)
-    return _eval(problem, state, "OneShot", [float(J0), float(J1)], 1)
+    J0, aux0 = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
+    state = placement_update(
+        problem, state, aux0["ctg"], use_pallas=use_pallas, solver=solver
+    )
+    state = forwarding_update(problem, state, t_phi=t_phi, alpha=alpha, solver=solver)
+    J1, aux1 = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
+    return _result(problem, state, aux1, "OneShot", [float(J0), float(J1)], 1)
 
 
 def linearize(problem: Problem) -> Problem:
@@ -121,10 +143,13 @@ def linearize(problem: Problem) -> Problem:
             w_comm=problem.cost.w_comm,
             w_comp=problem.cost.w_comp,
         ),
+        hop_bound=problem.hop_bound,
     )
 
 
-def solve_congunaware(problem: Problem, *, use_pallas: bool = False) -> Result:
+def solve_congunaware(
+    problem: Problem, *, use_pallas: bool = False, solver: str = "neumann"
+) -> Result:
     """Shortest extended path under linear costs, evaluated with true costs.
 
     Implementation note: with linear costs the zero-load marginals ARE the
@@ -134,7 +159,8 @@ def solve_congunaware(problem: Problem, *, use_pallas: bool = False) -> Result:
     initialization's joint (h1, h2) scan under the linear cost model.
     """
     state = structured_init(linearize(problem), use_pallas=use_pallas)
-    return _eval(problem, state, "CongUnaware", [], 0)
+    J, aux = objective(problem, state, solver=solver)
+    return _result(problem, state, aux, "CongUnaware", [], 0)
 
 
 def solve_colocated(
@@ -146,6 +172,7 @@ def solve_colocated(
     tol: float = 1e-3,
     patience: int = 4,
     use_pallas: bool = False,
+    solver: str = "neumann",
 ) -> Result:
     """Both partitions at a single node; forwarding still congestion-aware."""
     res = solve_alt(
@@ -157,6 +184,7 @@ def solve_colocated(
         patience=patience,
         colocate=True,
         use_pallas=use_pallas,
+        solver=solver,
         name="CoLocated",
     )
     return res
@@ -178,9 +206,12 @@ def compare_all(problem: Problem, **kw) -> dict:
         t_phi=kw.get("t_phi", 10),
         alpha=kw.get("alpha", 0.5),
         use_pallas=kw.get("use_pallas", False),
+        solver=kw.get("solver", "neumann"),
     )
     out["CongUnaware"] = solve_congunaware(
-        problem, use_pallas=kw.get("use_pallas", False)
+        problem,
+        use_pallas=kw.get("use_pallas", False),
+        solver=kw.get("solver", "neumann"),
     )
     out["CoLocated"] = solve_colocated(
         problem,
@@ -188,5 +219,6 @@ def compare_all(problem: Problem, **kw) -> dict:
         t_phi=kw.get("t_phi", 10),
         alpha=kw.get("alpha", 0.5),
         use_pallas=kw.get("use_pallas", False),
+        solver=kw.get("solver", "neumann"),
     )
     return out

@@ -13,9 +13,11 @@ with stage sources
     b^{a,1} = x^{a,1} .* t^{a,0}    (partition 1 host converts stage 0 -> 1)
     b^{a,2} = x^{a,2} .* t^{a,1}.
 
-TPU adaptation (DESIGN.md section 3): instead of the paper's per-node recursive
-evaluation, we batch the three solves over applications with vmap — dense
-[V,V] solves on the MXU.
+TPU adaptation (DESIGN.md sections 3 and 10): the fixed point is solved
+batched over applications. The default `solver="neumann"` exploits the
+nilpotency directly — a hop-capped propagation x <- b + Phi^T x (O(H V^2)
+per solve, kernels/neumann) — while `solver="lu"` keeps the dense
+O(V^3) `jnp.linalg.solve` as the exactness reference.
 """
 from __future__ import annotations
 
@@ -25,29 +27,66 @@ import jax
 import jax.numpy as jnp
 
 from . import costs
+from ..kernels.neumann import effective_hops, neumann_solve
 from .structs import Apps, Network, Problem, State, one_hot
 
-
-def _solve_t(phi_k: jax.Array, b: jax.Array) -> jax.Array:
-    """t = (I - phi_k^T)^{-1} b for one app/stage. phi_k: [V,V], b: [V]."""
-    n = phi_k.shape[-1]
-    eye = jnp.eye(n, dtype=phi_k.dtype)
-    return jnp.linalg.solve(eye - phi_k.T, b)
+SOLVERS = ("neumann", "lu")
 
 
-@jax.jit
-def stage_traffic(problem: Problem, state: State) -> jax.Array:
+def stage_solve(
+    phi_k: jax.Array,
+    b: jax.Array,
+    problem: Problem,
+    *,
+    transpose: bool,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Batched (I - Phi^T) t = b (transpose=True) or (I - Phi) q = c solve.
+
+    phi_k: [..., V, V] stacked over apps (and fleet instances under vmap),
+    b: [..., V]. The hop cap comes from the Problem-carried bound.
+    """
+    if solver == "lu":
+        n = phi_k.shape[-1]
+        eye = jnp.eye(n, dtype=phi_k.dtype)
+        a = eye - (jnp.swapaxes(phi_k, -1, -2) if transpose else phi_k)
+        return jnp.linalg.solve(a, b[..., None])[..., 0]
+    if solver != "neumann":
+        raise ValueError(f"unknown solver {solver!r}; expected one of {SOLVERS}")
+    m = jnp.swapaxes(phi_k, -1, -2) if transpose else phi_k
+    hops = effective_hops(
+        problem.hop_bound, problem.net.n_nodes, fixed_loop=use_pallas
+    )
+    # interpret=True mirrors the minplus convention (use_pallas on CPU runs
+    # the kernel body under the interpreter for validation); a TPU launch
+    # profile flipping interpret=False is a ROADMAP item.
+    return neumann_solve(m, b, hops=hops, use_pallas=use_pallas, interpret=True)
+
+
+@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+def stage_traffic(
+    problem: Problem,
+    state: State,
+    *,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+) -> jax.Array:
     """[A, K, V] traffic rate t_i^{a,k} (requests/s)."""
     n = problem.net.n_nodes
     apps = problem.apps
     src_oh = one_hot(apps.src, n)  # [A, V]
+    solve = partial(
+        stage_solve, problem=problem, transpose=True, solver=solver,
+        use_pallas=use_pallas,
+    )
 
     b0 = apps.lam[:, None] * src_oh
-    t0 = jax.vmap(_solve_t)(state.phi[:, 0], b0)
+    t0 = solve(state.phi[:, 0], b0)
     b1 = state.x[:, 0, :] * t0
-    t1 = jax.vmap(_solve_t)(state.phi[:, 1], b1)
+    t1 = solve(state.phi[:, 1], b1)
     b2 = state.x[:, 1, :] * t1
-    t2 = jax.vmap(_solve_t)(state.phi[:, 2], b2)
+    t2 = solve(state.phi[:, 2], b2)
     return jnp.stack([t0, t1, t2], axis=1)
 
 
@@ -66,16 +105,29 @@ def loads(problem: Problem, state: State, t: jax.Array | None = None):
 
 
 @jax.jit
-def objective(problem: Problem, state: State):
-    """J(x, phi) plus a breakdown dict (Eq. 7 / the Fig-5 weighted variant)."""
-    t = stage_traffic(problem, state)
-    F, G = loads(problem, state, t)
+def objective_from_loads(problem: Problem, F: jax.Array, G: jax.Array):
+    """J and its comm/comp split from already-computed loads (Eq. 7)."""
     net, cm = problem.net, problem.cost
     D = costs.link_cost(F, net.mu, cm) * net.adj
     C = costs.comp_cost(G, net.nu, cm)
     j_comm = jnp.sum(D)
     j_comp = jnp.sum(C)
     J = cm.w_comm * j_comm + cm.w_comp * j_comp
+    return J, j_comm, j_comp
+
+
+@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+def objective(
+    problem: Problem,
+    state: State,
+    *,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+):
+    """J(x, phi) plus a breakdown dict (Eq. 7 / the Fig-5 weighted variant)."""
+    t = stage_traffic(problem, state, solver=solver, use_pallas=use_pallas)
+    F, G = loads(problem, state, t)
+    J, j_comm, j_comp = objective_from_loads(problem, F, G)
     return J, {"J": J, "J_comm": j_comm, "J_comp": j_comp, "F": F, "G": G, "t": t}
 
 
@@ -99,43 +151,52 @@ def marginal_comp(problem: Problem, G: jax.Array) -> jax.Array:
 
 
 def objective_with_injection(
-    problem: Problem, state: State, a: int, k: int, inj: jax.Array
+    problem: Problem,
+    state: State,
+    a: int,
+    k: int,
+    inj: jax.Array,
+    *,
+    solver: str = "neumann",
 ):
     """J when an extra exogenous stage-k source `inj` [V] is added for app a.
 
     Used to validate the marginal machinery: Gallager's identity says
     grad_inj J |_{inj=0} = q^{a,k} (the cost-to-go from marginals.py).
+    Differentiating the neumann path goes through custom_linear_solve's
+    implicit transpose solve, not the hop loop.
     """
     n = problem.net.n_nodes
     apps = problem.apps
     src_oh = one_hot(apps.src, n)
+    solve = partial(stage_solve, problem=problem, transpose=True, solver=solver)
 
     b0 = apps.lam[:, None] * src_oh
     if k == 0:
         b0 = b0.at[a].add(inj)
-    t0 = jax.vmap(_solve_t)(state.phi[:, 0], b0)
+    t0 = solve(state.phi[:, 0], b0)
     b1 = state.x[:, 0, :] * t0
     if k == 1:
         b1 = b1.at[a].add(inj)
-    t1 = jax.vmap(_solve_t)(state.phi[:, 1], b1)
+    t1 = solve(state.phi[:, 1], b1)
     b2 = state.x[:, 1, :] * t1
     if k == 2:
         b2 = b2.at[a].add(inj)
-    t2 = jax.vmap(_solve_t)(state.phi[:, 2], b2)
+    t2 = solve(state.phi[:, 2], b2)
     t = jnp.stack([t0, t1, t2], axis=1)
 
     F, G = loads(problem, state, t)
-    net, cm = problem.net, problem.cost
-    D = costs.link_cost(F, net.mu, cm) * net.adj
-    C = costs.comp_cost(G, net.nu, cm)
-    return cm.w_comm * jnp.sum(D) + cm.w_comp * jnp.sum(C)
+    J, _, _ = objective_from_loads(problem, F, G)
+    return J
 
 
-def total_absorbed(problem: Problem, state: State) -> jax.Array:
+def total_absorbed(
+    problem: Problem, state: State, *, solver: str = "neumann"
+) -> jax.Array:
     """[A] sanity metric: stage-2 traffic absorbed at each destination.
 
     Equals lambda_a when forwarding is consistent (conservation test)."""
-    t = stage_traffic(problem, state)
+    t = stage_traffic(problem, state, solver=solver)
     n = problem.net.n_nodes
     dst_oh = one_hot(problem.apps.dst, n)
     return jnp.sum(t[:, 2, :] * dst_oh, axis=-1)

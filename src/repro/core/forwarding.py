@@ -43,14 +43,28 @@ from .structs import BIG_THRESHOLD, Problem, State, forwarding_mass
 _PRUNE = 1e-9  # forwarding fractions below this are swept into j*
 
 
-@functools.partial(jax.jit, static_argnames=("alpha",))
-def forwarding_sweep(problem: Problem, state: State, alpha: float = 0.5) -> State:
-    """One full congestion-aware forwarding sweep (all apps/stages/nodes)."""
+@functools.partial(jax.jit, static_argnames=("alpha", "solver"))
+def forwarding_sweep(
+    problem: Problem,
+    state: State,
+    alpha: float = 0.5,
+    *,
+    solver: str = "neumann",
+    mass: jax.Array | None = None,
+) -> State:
+    """One full congestion-aware forwarding sweep (all apps/stages/nodes).
+
+    `mass` (the per-node emission totals, Eq. 2) depends only on the
+    placement x and the destinations — both fixed across the T_phi inner
+    sweeps — so `forwarding_update` computes it once and passes it in;
+    standalone callers may omit it.
+    """
     n = problem.net.n_nodes
-    delta, aux = link_marginals(problem, state)  # [A, K, V, V]
+    delta, aux = link_marginals(problem, state, solver=solver)  # [A, K, V, V]
     q = aux["q"]
 
-    mass = forwarding_mass(state, problem.apps, n)  # [A, K, V]
+    if mass is None:
+        mass = forwarding_mass(state, problem.apps, n)  # [A, K, V]
 
     delta_min = jnp.min(delta, axis=-1, keepdims=True)  # [A, K, V, 1]
     jstar = jnp.argmin(delta, axis=-1)  # [A, K, V]
@@ -78,18 +92,26 @@ def forwarding_sweep(problem: Problem, state: State, alpha: float = 0.5) -> Stat
     return State(x=state.x, phi=phi)
 
 
-@functools.partial(jax.jit, static_argnames=("t_phi", "alpha"))
+@functools.partial(jax.jit, static_argnames=("t_phi", "alpha", "solver"))
 def forwarding_update(
-    problem: Problem, state: State, *, t_phi: int = 8, alpha: float = 0.5
+    problem: Problem,
+    state: State,
+    *,
+    t_phi: int = 8,
+    alpha: float = 0.5,
+    solver: str = "neumann",
 ) -> State:
     """T_phi inner forwarding sweeps (the paper's forwarding subproblem 8).
 
     A fori_loop rather than a Python loop so the update stays a single XLA
     while-op when embedded in outer lax.scan bodies (the batched fleet
-    solver traces this once per outer round, not t_phi times).
+    solver traces this once per outer round, not t_phi times). The emission
+    mass is hoisted out of the loop: it changes only when x or the absorbed
+    (destination) mass changes, never across forwarding micro-steps.
     """
+    mass = forwarding_mass(state, problem.apps, problem.net.n_nodes)
 
     def body(_, s):
-        return forwarding_sweep(problem, s, alpha=alpha)
+        return forwarding_sweep(problem, s, alpha=alpha, solver=solver, mass=mass)
 
     return jax.lax.fori_loop(0, t_phi, body, state)

@@ -12,37 +12,58 @@ forwarding state:
 
 i.e. a host node absorbs the stage, pays the computation marginal kappa, and
 re-injects the next stage locally. Each line is a linear fixed point
-(I - Phi) q = c, solved batched over applications (TPU adaptation of the
-paper's backward recursion toward upstream, DESIGN.md section 3).
+(I - Phi) q = c, solved batched over applications on the same propagation
+path as the traffic solve (DESIGN.md sections 3 and 10; `solver="lu"`
+keeps the dense reference).
 
 delta^{a,k}_{ij} = L_{a,k} D'_{ij}(F_{ij}) + q^{a,k}_j  is the per-link
 forwarding marginal used by both the forwarding update and its blocking rule.
+
+`round_eval` is the once-per-outer-round evaluation shared by the round's
+objective read-out and the next placement sweep: both consume the identical
+(q, dp, kappa, t, F, G) tuple, so the ALT loop no longer re-solves the
+traffic fixed point separately for `objective` and `placement_update`
+(the per-round dataflow restructure of DESIGN.md section 10).
 """
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from .flow import loads, marginal_comp, marginal_link_weights, stage_traffic
+from .flow import (
+    loads,
+    marginal_comp,
+    marginal_link_weights,
+    objective_from_loads,
+    stage_solve,
+    stage_traffic,
+)
 from .structs import BIG, Problem, State
 
 
-def _solve_q(phi_k: jax.Array, c: jax.Array) -> jax.Array:
-    n = phi_k.shape[-1]
-    eye = jnp.eye(n, dtype=phi_k.dtype)
-    return jnp.linalg.solve(eye - phi_k, c)
-
-
-@jax.jit
-def cost_to_go(problem: Problem, state: State, t: jax.Array | None = None):
+@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+def cost_to_go(
+    problem: Problem,
+    state: State,
+    t: jax.Array | None = None,
+    *,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+):
     """Returns (q [A,K,V], dp [V,V], kappa [A,P,V], t [A,K,V], F, G)."""
     if t is None:
-        t = stage_traffic(problem, state)
+        t = stage_traffic(problem, state, solver=solver, use_pallas=use_pallas)
     F, G = loads(problem, state, t)
     dp = marginal_link_weights(problem, F)  # BIG off-edges
     dp_edges = jnp.where(problem.net.adj > 0, dp, 0.0)  # safe for sums
     kappa = marginal_comp(problem, G)  # [A, P, V]
     L = problem.apps.L  # [A, 3]
+    solve = partial(
+        stage_solve, problem=problem, transpose=False, solver=solver,
+        use_pallas=use_pallas,
+    )
 
     def link_term(phi_k, Lk):
         # c_i = sum_j phi_{ij} * L_k * D'_{ij}
@@ -50,24 +71,60 @@ def cost_to_go(problem: Problem, state: State, t: jax.Array | None = None):
 
     # Stage 2 (toward destinations).
     c2 = link_term(state.phi[:, 2], L[:, 2][:, None])
-    q2 = jax.vmap(_solve_q)(state.phi[:, 2], c2)
+    q2 = solve(state.phi[:, 2], c2)
     # Stage 1 (toward partition-2 hosts, then continue as stage 2).
     c1 = link_term(state.phi[:, 1], L[:, 1][:, None])
     c1 = c1 + state.x[:, 1, :] * (kappa[:, 1, :] + q2)
-    q1 = jax.vmap(_solve_q)(state.phi[:, 1], c1)
+    q1 = solve(state.phi[:, 1], c1)
     # Stage 0 (toward partition-1 hosts, then continue as stage 1).
     c0 = link_term(state.phi[:, 0], L[:, 0][:, None])
     c0 = c0 + state.x[:, 0, :] * (kappa[:, 0, :] + q1)
-    q0 = jax.vmap(_solve_q)(state.phi[:, 0], c0)
+    q0 = solve(state.phi[:, 0], c0)
 
     q = jnp.stack([q0, q1, q2], axis=1)  # [A, K, V]
     return q, dp, kappa, t, F, G
 
 
-@jax.jit
-def link_marginals(problem: Problem, state: State):
+@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+def round_eval(
+    problem: Problem,
+    state: State,
+    *,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+):
+    """One full marginal evaluation of `state`: (J, aux).
+
+    aux carries everything the round needs downstream — the objective
+    breakdown for the history/stall logic AND the (q, dp, kappa, t, F, G)
+    tuple the next placement sweep consumes — computed from a single
+    traffic solve instead of one per consumer.
+    """
+    q, dp, kappa, t, F, G = cost_to_go(
+        problem, state, solver=solver, use_pallas=use_pallas
+    )
+    J, j_comm, j_comp = objective_from_loads(problem, F, G)
+    aux = {
+        "J": J,
+        "J_comm": j_comm,
+        "J_comp": j_comp,
+        "ctg": (q, dp, kappa, t, F, G),
+    }
+    return J, aux
+
+
+@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+def link_marginals(
+    problem: Problem,
+    state: State,
+    *,
+    solver: str = "neumann",
+    use_pallas: bool = False,
+):
     """delta^{a,k}_{ij} (Eq. 10), BIG on non-edges. Returns (delta, aux)."""
-    q, dp, kappa, t, F, G = cost_to_go(problem, state)
+    q, dp, kappa, t, F, G = cost_to_go(
+        problem, state, solver=solver, use_pallas=use_pallas
+    )
     L = problem.apps.L  # [A, 3]
     # delta[a,k,i,j] = L[a,k] * dp[i,j] + q[a,k,j]
     delta = L[:, :, None, None] * dp[None, None, :, :] + q[:, :, None, :]

@@ -42,16 +42,25 @@ def _sp_tree_phi(nexthop_to: jax.Array, target: jax.Array, mass: jax.Array, n: i
     return rows * mass[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("colocate", "use_pallas", "move_margin"))
+@functools.partial(
+    jax.jit, static_argnames=("colocate", "use_pallas", "move_margin", "solver")
+)
 def placement_update(
     problem: Problem,
     state: State,
+    ctg=None,
     *,
     colocate: bool = False,
     use_pallas: bool = False,
     move_margin: float = 0.02,
+    solver: str = "neumann",
 ) -> State:
     """One placement reassignment sweep over all applications.
+
+    `ctg` is an optional precomputed (q, dp, kappa, t, F, G) tuple from
+    `marginals.cost_to_go` / `round_eval` evaluated at `state` — the ALT
+    loop passes the round-final evaluation so placement never re-solves
+    the traffic fixed point it was just measured with.
 
     The paper's "sequentially update" (footnote 5 + Eq. 16) is implemented as
     a lax.scan over applications with an *incrementally maintained* compute
@@ -68,7 +77,9 @@ def placement_update(
     """
     n = problem.net.n_nodes
     apps = problem.apps
-    q, dp, kappa, t, F, G = cost_to_go(problem, state)
+    if ctg is None:
+        ctg = cost_to_go(problem, state, solver=solver, use_pallas=use_pallas)
+    q, dp, kappa, t, F, G = ctg
     dist, nexthop = apsp_with_nexthop(dp, use_pallas=use_pallas)
 
     hosts = state.hosts()  # [A, 2]

@@ -16,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from .structs import Apps, BIG, CostModel, Network, Problem
+from .structs import Apps, BIG, CostModel, Network, Problem, with_hop_bound
 
 # Stage packet sizes (L0, L1, L2): first partition acts as local compression.
 DEFAULT_L = (2.0, 0.8, 0.3)
@@ -101,7 +101,7 @@ def iot(load_scale: float = 1.0, seed: int = 0, cost: CostModel | None = None) -
     net = build_network(n, edges, mu_map, nu)
     rng = np.random.RandomState(seed)
     apps = gen_apps(rng, 20, np.arange(5, 17), "same", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None) -> Problem:
@@ -120,7 +120,7 @@ def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None) 
     net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
     apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = None) -> Problem:
@@ -134,7 +134,7 @@ def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = 
     net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
     apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 # 22-node GEANT-inspired backbone (undirected edge list). Node indices are
@@ -155,7 +155,7 @@ def geant(load_scale: float = 1.0, seed: int = 3, cost: CostModel | None = None)
     net = build_network(n, _GEANT_EDGES, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
     apps = gen_apps(rng, 30, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def random_connected(
@@ -177,7 +177,7 @@ def random_connected(
     mu_map = {e: float(rng.uniform(5.0, 15.0)) for e in edges}
     net = build_network(n, edges, mu_map, nu)
     apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 SCENARIOS = {

@@ -108,12 +108,46 @@ _register(CostModel, ["rho_max", "w_comm", "w_comp"], ["kind"])
 
 @dataclasses.dataclass(frozen=True)
 class Problem:
+    """One placement/routing instance, plus solver-facing static metadata.
+
+    hop_bound : static bound on the *typical* loop-free forwarding path
+        (unweighted graph diameter + 2 host re-injections) — the expected
+        early-exit point of the Neumann propagation solver's hop loop. The
+        solver's hard cap floors this with the nilpotency-index bound V + 1
+        (kernels/neumann.effective_hops), so refined multipath paths longer
+        than the diameter stay exact. `None` means unknown (the floor alone
+        applies). Static metadata (it sizes a loop), so fleets unify it to
+        the batch max before stacking (fleet/pad.py).
+    """
+
     net: Network
     apps: Apps
     cost: CostModel
+    hop_bound: int | None = None
 
 
-_register(Problem, ["net", "apps", "cost"])
+_register(Problem, ["net", "apps", "cost"], ["hop_bound"])
+
+
+def infer_hop_bound(net: Network) -> int:
+    """Unweighted graph diameter (via the existing tropical-squaring APSP)
+    plus 2, covering one host re-injection per stage hand-off.
+
+    Concrete (Python-int) by construction: call at problem build time, not
+    inside traced code."""
+    from ..kernels.minplus import apsp
+
+    w = jnp.where(net.adj > 0, 1.0, BIG)
+    d = apsp(w)
+    diam = jnp.max(jnp.where(d < BIG_THRESHOLD, d, 0.0))
+    return int(diam) + 2
+
+
+def with_hop_bound(problem: Problem) -> Problem:
+    """Attach the inferred hop bound (no-op if already carried)."""
+    if problem.hop_bound is not None:
+        return problem
+    return dataclasses.replace(problem, hop_bound=infer_hop_bound(problem.net))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -14,6 +14,7 @@ from .pad import (  # noqa: F401
     pad_network,
     pad_problem,
     stack_problems,
+    unify_hop_bound,
 )
 from .solve import (  # noqa: F401
     METHODS,

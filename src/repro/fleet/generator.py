@@ -28,7 +28,7 @@ import numpy as np
 
 from ..core import scenarios as S
 from ..core.scenarios import build_network, gen_apps
-from ..core.structs import CostModel, Problem
+from ..core.structs import CostModel, Problem, with_hop_bound
 
 
 def _hetero_rates(rng, edges, n, mu_range=(5.0, 15.0), nu_range=(5.0, 15.0)):
@@ -65,7 +65,7 @@ def erdos_renyi(
     mu_map, nu = _hetero_rates(rng, edges, n)
     net = build_network(n, edges, mu_map, nu)
     apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def barabasi_albert(
@@ -90,7 +90,7 @@ def barabasi_albert(
     nu = (nu * (0.5 + deg / deg.mean())).astype(np.float32)
     net = build_network(n, edges, mu_map, nu)
     apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def iot_hierarchy(
@@ -145,7 +145,7 @@ def iot_hierarchy(
     apps = gen_apps(
         rng, a, np.arange(first_dev, n), "same", n, load_scale=load_scale
     )
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 def perturbed_geant(
@@ -175,7 +175,7 @@ def perturbed_geant(
     mu_map = {e: float(10.0 * jit(1)[0]) for e in edges}
     net = build_network(n, edges, mu_map, nu)
     apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
-    return Problem(net=net, apps=apps, cost=cost or CostModel())
+    return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
 FAMILIES = {

@@ -100,12 +100,16 @@ def pad_apps(apps: Apps, n_apps: int) -> Apps:
 def pad_problem(
     problem: Problem, n_nodes: int, n_apps: int
 ) -> tuple[Problem, PadInfo]:
-    """Pad one problem to the (n_nodes, n_apps) envelope; returns masks."""
+    """Pad one problem to the (n_nodes, n_apps) envelope; returns masks.
+
+    Padded nodes are disconnected, so the graph diameter — and with it the
+    carried `hop_bound` — is unchanged by padding."""
     v, a = problem.net.n_nodes, problem.apps.n_apps
     padded = Problem(
         net=pad_network(problem.net, n_nodes),
         apps=pad_apps(problem.apps, n_apps),
         cost=problem.cost,
+        hop_bound=problem.hop_bound,
     )
     info = PadInfo(
         node_mask=(jnp.arange(n_nodes) < v).astype(jnp.float32),
@@ -130,15 +134,34 @@ def fleet_envelope(problems, round_to: int = 1) -> tuple[int, int]:
     return v, a
 
 
+def unify_hop_bound(problems) -> int:
+    """One batch-wide Neumann hop bound: the max over instances, with the
+    nilpotency-index bound V + 1 standing in for any instance that does not
+    carry one. `hop_bound` is static metadata (it sizes the solver's hop
+    loop), so stacking must agree on a single value — the max is correct
+    for every instance because extra hops past an instance's own bound are
+    no-ops under the early-exit residual check."""
+    return max(
+        p.hop_bound if p.hop_bound is not None else p.net.n_nodes + 1
+        for p in problems
+    )
+
+
 def stack_problems(
-    problems, round_to: int = 1
+    problems, round_to: int = 1, envelope: tuple[int, int] | None = None,
+    hop_bound: int | None = None,
 ) -> tuple[Problem, PadInfo]:
     """Pad every instance to the fleet envelope and stack into one pytree.
 
     Returns (stacked_problem, stacked_info) whose array leaves all carry a
     leading instance axis of length len(problems). Requires every cost
     model to share `kind` (it is static metadata selecting a code path);
-    rho_max / w_comm / w_comp may differ per instance.
+    rho_max / w_comm / w_comp may differ per instance. Per-instance
+    `hop_bound`s are unified to the batch max (see `unify_hop_bound`).
+
+    `envelope` / `hop_bound` override the computed (V, A) envelope and the
+    unified bound — the chunked fleet path passes the *global* values so
+    every chunk compiles to the same program.
     """
     if not problems:
         raise ValueError("empty fleet")
@@ -148,7 +171,9 @@ def stack_problems(
             f"fleet mixes cost kinds {sorted(kinds)}; CostModel.kind is "
             "static metadata and must be uniform within one batch"
         )
-    v, a = fleet_envelope(problems, round_to=round_to)
+    v, a = envelope if envelope is not None else fleet_envelope(problems, round_to=round_to)
+    hb = hop_bound if hop_bound is not None else unify_hop_bound(problems)
+    problems = [dataclasses.replace(p, hop_bound=hb) for p in problems]
     padded, infos = zip(*(pad_problem(p, v, a) for p in problems))
     def stack(*xs):
         # Leaves are arrays except the CostModel scalars, which may still be

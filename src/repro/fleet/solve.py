@@ -10,14 +10,22 @@ retracing per topology, and dense [B, ...] linear algebra throughout.
 
 Equivalence contract: for every instance, the returned J matches the
 sequential `solve_alt` on the unpadded problem (same m_max / t_phi / alpha /
-tol / patience) up to float32 rounding. Early stopping is reproduced by
-masking: once an instance's best J has stalled for `patience` rounds it is
-frozen (its carried state stops updating) while the rest of the batch keeps
-iterating — identical results to a per-instance break, at fixed compute.
+tol / patience / solver) up to float32 rounding. Early stopping is
+reproduced by masking: once an instance's best J has stalled for `patience`
+rounds it is frozen (its carried state stops updating) while the rest of the
+batch keeps iterating — identical results to a per-instance break, at fixed
+compute.
 
-An optional sharding hook splits the instance axis over local devices; with
-one device it is a no-op, so CPU development and multi-chip deployment use
-the same entry point (DESIGN.md section 9).
+The scan body mirrors core/alt.py's restructured round dataflow: one
+`round_eval` per round feeds both the history/stall logic and the next
+placement sweep, and the linear fixed points run on the propagation solver
+(`solver="neumann"`, default) or dense LU (`solver="lu"`).
+
+Scaling hooks: `shard=True` splits the instance axis over local devices;
+`chunk_size=B` splits very large ensembles into fixed-B chunks that all pad
+to the *global* (V, A) envelope and unified hop bound, so arbitrary fleet
+sizes reuse ONE compiled program per (V, A, B) signature instead of
+compiling one giant batch (DESIGN.md sections 9-10).
 """
 from __future__ import annotations
 
@@ -31,9 +39,10 @@ import numpy as np
 from ..core.alt import linearize
 from ..core.flow import objective
 from ..core.forwarding import forwarding_update
+from ..core.marginals import round_eval
 from ..core.placement import placement_update, structured_init
 from ..core.structs import Problem
-from .pad import PadInfo, stack_problems
+from .pad import PadInfo, fleet_envelope, stack_problems, unify_hop_bound
 
 METHODS = ("ALT", "OneShot", "CongUnaware", "CoLocated")
 
@@ -69,16 +78,25 @@ class FleetResult:
         out = []
         for b in range(self.n_instances):
             hist = self.history[b]
-            out.append(
-                {
-                    "J": float(self.J[b]),
-                    "J_comm": float(self.J_comm[b]),
-                    "J_comp": float(self.J_comp[b]),
-                    "history": [float(h) for h in hist[~np.isnan(hist)]],
-                    "iters": int(self.iters[b]),
-                    "hosts": self.hosts[b][self.app_mask[b] > 0].tolist(),
-                }
-            )
+            n_real = int(self.node_mask[b].sum())
+            hosts = self.hosts[b][self.app_mask[b] > 0]
+            # Padded-envelope indices must never leak to consumers: a host
+            # beyond the real-node block would be a solver bug (padded
+            # nodes carry a prohibitive marginal compute cost), so flag it
+            # and clamp into the valid range either way.
+            leaked = int(np.sum(hosts >= n_real))
+            hosts = np.minimum(hosts, n_real - 1)
+            row = {
+                "J": float(self.J[b]),
+                "J_comm": float(self.J_comm[b]),
+                "J_comp": float(self.J_comp[b]),
+                "history": [float(h) for h in hist[~np.isnan(hist)]],
+                "iters": int(self.iters[b]),
+                "hosts": hosts.tolist(),
+            }
+            if leaked:
+                row["padded_host_leaks"] = leaked
+            out.append(row)
         return out
 
     def summary(self) -> str:
@@ -93,16 +111,6 @@ def _tree_where(pred, a, b):
     return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
 
 
-def _instance_result(problem: Problem, state) -> dict:
-    J, aux = objective(problem, state)
-    return {
-        "J": J,
-        "J_comm": aux["J_comm"],
-        "J_comp": aux["J_comp"],
-        "hosts": state.hosts(),
-    }
-
-
 def _solve_one_iterative(
     problem: Problem,
     *,
@@ -114,65 +122,90 @@ def _solve_one_iterative(
     colocate: bool,
     track_best: bool,
     use_pallas: bool,
+    solver: str,
 ) -> dict:
     """Fixed-iteration scan variant of `solve_alt` for ONE instance.
 
-    Mirrors core/alt.py's loop body exactly (placement -> T_phi forwarding
-    sweeps -> objective, best-iterate tracking, tol/patience stall logic) but
-    with static trip count so it vmaps/jits as a single computation.
+    Mirrors core/alt.py's restructured loop body exactly (placement fed by
+    the previous round's evaluation -> T_phi forwarding sweeps -> one
+    round_eval, best-iterate tracking, tol/patience stall logic) but with
+    static trip count so it vmaps/jits as a single computation.
     `track_best=False` reproduces `solve_oneshot`'s final-state semantics.
     """
     state0 = structured_init(problem, colocate=colocate, use_pallas=use_pallas)
-    J0, _ = objective(problem, state0)
+    J0, aux0 = round_eval(problem, state0, solver=solver, use_pallas=use_pallas)
+
+    def objective_of(aux):
+        # The best-iterate slot only ever surfaces the objective split —
+        # carrying the full ctg tuple there would double the scan-carry
+        # footprint of the [A, K, V, V]-sized marginal tensors for nothing.
+        return {"J": aux["J"], "J_comm": aux["J_comm"], "J_comp": aux["J_comp"]}
 
     def step(carry, _):
-        state, best_state, best_J, stall, iters, active = carry
+        state, aux, best, best_J, stall, iters, active = carry
         nxt = placement_update(
-            problem, state, colocate=colocate, use_pallas=use_pallas
+            problem, state, aux["ctg"], colocate=colocate, use_pallas=use_pallas,
+            solver=solver,
         )
-        nxt = forwarding_update(problem, nxt, t_phi=t_phi, alpha=alpha)
-        J, _ = objective(problem, nxt)
+        nxt = forwarding_update(
+            problem, nxt, t_phi=t_phi, alpha=alpha, solver=solver
+        )
+        J, aux_nxt = round_eval(problem, nxt, solver=solver, use_pallas=use_pallas)
         # Stall bookkeeping against the best J *before* this round's update,
         # exactly as in solve_alt.
         improved = J < best_J * (1.0 - tol)
         stall_nxt = jnp.where(improved, 0, stall + 1)
-        best_state_nxt = _tree_where(J < best_J, nxt, best_state)
+        best_nxt = _tree_where(J < best_J, (nxt, objective_of(aux_nxt)), best)
         best_J_nxt = jnp.minimum(J, best_J)
         # Frozen instances (early-stopped under masking) keep everything.
         state = _tree_where(active, nxt, state)
-        best_state = _tree_where(active, best_state_nxt, best_state)
+        aux = _tree_where(active, aux_nxt, aux)
+        best = _tree_where(active, best_nxt, best)
         best_J = jnp.where(active, best_J_nxt, best_J)
         stall = jnp.where(active, stall_nxt, stall)
         iters = iters + active.astype(jnp.int32)
         hist = jnp.where(active, J, jnp.nan)
         active = active & (stall < patience)
-        return (state, best_state, best_J, stall, iters, active), hist
+        return (state, aux, best, best_J, stall, iters, active), hist
 
-    carry0 = (state0, state0, J0, jnp.int32(0), jnp.int32(0), jnp.bool_(True))
-    (state, best_state, best_J, _, iters, _), hist = jax.lax.scan(
+    carry0 = (
+        state0, aux0, (state0, objective_of(aux0)), J0, jnp.int32(0),
+        jnp.int32(0), jnp.bool_(True),
+    )
+    (state, aux, best, _, _, iters, _), hist = jax.lax.scan(
         step, carry0, None, length=m_max
     )
     history = jnp.concatenate([J0[None], hist])
-    if track_best:
-        out = _instance_result(problem, best_state)
-    else:
-        out = _instance_result(problem, state)
-    out.update(history=history, iters=iters)
-    return out
+    out_state, out_aux = best if track_best else (state, aux)
+    return {
+        "J": out_aux["J"],
+        "J_comm": out_aux["J_comm"],
+        "J_comp": out_aux["J_comp"],
+        "hosts": out_state.hosts(),
+        "history": history,
+        "iters": iters,
+    }
 
 
-def _solve_one_congunaware(problem: Problem, *, use_pallas: bool) -> dict:
+def _solve_one_congunaware(problem: Problem, *, use_pallas: bool, solver: str) -> dict:
     """Zero-iteration baseline: linear-cost init scored under true costs."""
     state = structured_init(linearize(problem), use_pallas=use_pallas)
-    out = _instance_result(problem, state)
-    out.update(history=out["J"][None], iters=jnp.int32(0))
-    return out
+    J, aux = objective(problem, state, solver=solver)
+    return {
+        "J": J,
+        "J_comm": aux["J_comm"],
+        "J_comp": aux["J_comp"],
+        "hosts": state.hosts(),
+        "history": J[None],
+        "iters": jnp.int32(0),
+    }
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "method", "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
+        "solver",
     ),
 )
 def _solve_fleet_stacked(
@@ -185,10 +218,13 @@ def _solve_fleet_stacked(
     tol: float,
     patience: int,
     use_pallas: bool,
+    solver: str,
 ) -> dict:
     """vmap the per-instance solver over the stacked instance axis."""
     if method == "CongUnaware":
-        fn = functools.partial(_solve_one_congunaware, use_pallas=use_pallas)
+        fn = functools.partial(
+            _solve_one_congunaware, use_pallas=use_pallas, solver=solver
+        )
     else:
         fn = functools.partial(
             _solve_one_iterative,
@@ -200,6 +236,7 @@ def _solve_fleet_stacked(
             colocate=method == "CoLocated",
             track_best=method != "OneShot",
             use_pallas=use_pallas,
+            solver=solver,
         )
     return jax.vmap(fn)(stacked)
 
@@ -223,6 +260,16 @@ def _shard_over_devices(stacked: Problem, info: PadInfo, batch: int):
     return jax.tree_util.tree_map(put, (stacked, info))
 
 
+def _run_chunk(problems, *, envelope, hop_bound, round_to, shard, solve_kw):
+    stacked, info = stack_problems(
+        problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound
+    )
+    if shard:
+        stacked, info = _shard_over_devices(stacked, info, len(problems))
+    out = _solve_fleet_stacked(stacked, **solve_kw)
+    return out, info
+
+
 def solve_fleet(
     problems,
     *,
@@ -235,41 +282,70 @@ def solve_fleet(
     round_to: int = 1,
     shard: bool = False,
     use_pallas: bool = False,
+    solver: str = "neumann",
+    chunk_size: int | None = None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of problems as one batched computation.
 
-    problems : list of `Problem` (arbitrary mixed sizes; padded internally)
-    method   : "ALT" | "OneShot" | "CongUnaware" | "CoLocated", matching the
-               sequential solvers in core/alt.py instance-for-instance
-    round_to : round the padded (V, A) envelope up to this multiple so a
-               long-running control plane compiles few distinct shapes
-    shard    : lay the instance axis out over local devices when possible
+    problems   : list of `Problem` (arbitrary mixed sizes; padded internally)
+    method     : "ALT" | "OneShot" | "CongUnaware" | "CoLocated", matching
+                 the sequential solvers in core/alt.py instance-for-instance
+    round_to   : round the padded (V, A) envelope up to this multiple so a
+                 long-running control plane compiles few distinct shapes
+    shard      : lay the instance axis out over local devices when possible
+    solver     : "neumann" (hop-capped propagation, default) | "lu" (dense)
+    chunk_size : split ensembles larger than this into fixed-B chunks that
+                 share one global (V, A) envelope + hop bound, reusing a
+                 single compiled program per (V, A, B) signature; the tail
+                 chunk is padded with repeats of its first instance (results
+                 trimmed). None = one batch.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
-    stacked, info = stack_problems(problems, round_to=round_to)
-    if shard:
-        stacked, info = _shard_over_devices(stacked, info, len(problems))
-    out = _solve_fleet_stacked(
-        stacked,
-        method=method,
-        m_max=m_max,
-        t_phi=t_phi,
-        alpha=alpha,
-        tol=tol,
-        patience=patience,
-        use_pallas=use_pallas,
+    solve_kw = dict(
+        method=method, m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol,
+        patience=patience, use_pallas=use_pallas, solver=solver,
     )
+    n = len(problems)
+    if chunk_size is None or n <= chunk_size:
+        out, info = _run_chunk(
+            problems, envelope=None, hop_bound=None, round_to=round_to,
+            shard=shard, solve_kw=solve_kw,
+        )
+        outs, infos, keep = [out], [info], [n]
+    else:
+        # One global envelope + hop bound so every chunk hits the same
+        # compiled program.
+        envelope = fleet_envelope(problems, round_to=round_to)
+        hop_bound = unify_hop_bound(problems)
+        outs, infos, keep = [], [], []
+        for i in range(0, n, chunk_size):
+            chunk = list(problems[i : i + chunk_size])
+            real = len(chunk)
+            chunk += [chunk[0]] * (chunk_size - real)  # inert tail repeats
+            out, info = _run_chunk(
+                chunk, envelope=envelope, hop_bound=hop_bound,
+                round_to=round_to, shard=shard, solve_kw=solve_kw,
+            )
+            outs.append(out)
+            infos.append(info)
+            keep.append(real)
+
+    def gather(getter):
+        return np.concatenate(
+            [np.asarray(getter(o, i))[:k] for (o, i, k) in zip(outs, infos, keep)]
+        )
+
     return FleetResult(
         method=method,
-        J=np.asarray(out["J"]),
-        J_comm=np.asarray(out["J_comm"]),
-        J_comp=np.asarray(out["J_comp"]),
-        history=np.asarray(out["history"]),
-        iters=np.asarray(out["iters"]),
-        hosts=np.asarray(out["hosts"]),
-        node_mask=np.asarray(info.node_mask),
-        app_mask=np.asarray(info.app_mask),
+        J=gather(lambda o, i: o["J"]),
+        J_comm=gather(lambda o, i: o["J_comm"]),
+        J_comp=gather(lambda o, i: o["J_comp"]),
+        history=gather(lambda o, i: o["history"]),
+        iters=gather(lambda o, i: o["iters"]),
+        hosts=gather(lambda o, i: o["hosts"]),
+        node_mask=gather(lambda o, i: i.node_mask),
+        app_mask=gather(lambda o, i: i.app_mask),
     )
 
 
@@ -282,7 +358,10 @@ def solve_sequential(problems, *, method: str = "ALT", **kw) -> list:
 
     fn = ALL_METHODS[method]
     if method == "OneShot":
-        kw = {k: v for k, v in kw.items() if k in ("t_phi", "alpha", "use_pallas")}
+        kw = {
+            k: v for k, v in kw.items()
+            if k in ("t_phi", "alpha", "use_pallas", "solver")
+        }
     elif method == "CongUnaware":
-        kw = {k: v for k, v in kw.items() if k in ("use_pallas",)}
+        kw = {k: v for k, v in kw.items() if k in ("use_pallas", "solver")}
     return [fn(p, **kw) for p in problems]

@@ -2,6 +2,9 @@
 
   minplus          tropical (min,+) matmul — the APSP inner loop of the
                    paper's placement step (TPU-native Dijkstra replacement)
+  neumann          fused batched Neumann propagation hops — the loop-free
+                   flow / cost-to-go fixed points of the ALT hot loop
+                   (replaces the dense LU solves; DESIGN.md section 10)
   flash_attention  blockwise GQA attention for the model zoo's dominant op
 
 Each kernel package ships kernel.py (pl.pallas_call + BlockSpec), ops.py

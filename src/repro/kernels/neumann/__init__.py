@@ -1,0 +1,7 @@
+from .ops import (  # noqa: F401
+    DEFAULT_TOL,
+    NEUMANN_SLACK,
+    effective_hops,
+    neumann_solve,
+)
+from .ref import lu_solve_ref, neumann_solve_ref  # noqa: F401

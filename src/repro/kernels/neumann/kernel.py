@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused batched Neumann propagation hops.
+
+Solves (I - M) x = b for a batch of independent [V, V] operators by keeping
+each operator resident in VMEM and iterating the propagation recurrence
+
+    x <- b + M x
+
+for a fixed (Problem-derived) hop cap, with an early-exit residual check
+folded into the loop: once two consecutive iterates agree to `tol`
+(relative), the carry freezes and the remaining hops are no-ops. On the LU
+path every solve re-factorizes a [V, V] matrix from HBM at O(V^3) MXU-hostile
+work; here the operator is loaded once and each hop is a single [1, Vp] x
+[Vp, Vp] MXU matvec at O(V^2), so a hop cap H gives an O(V/H) flop advantage
+and a single-load memory profile (the roofline argument in DESIGN.md
+section 10).
+
+Layout: the caller passes the *transposed* operator W = M^T so the iterate
+can live as a row vector — x_new = b + x @ W — which keeps the V axis on the
+lane dimension (128-aligned) and the matvec on the MXU. Batch is the grid's
+only dimension; each grid step owns one operator.
+
+VMEM budget per grid step (fp32): W tile Vp^2 * 4 B + three [1, Vp] rows.
+Vp = 512 -> 1 MiB, Vp = 1024 -> 4 MiB; beyond that the operator must be
+tiled over K like the minplus kernel (not needed at the paper's scales —
+guarded by an assert).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Renamed TPUCompilerParams -> CompilerParams across JAX releases.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+LANE = 128
+MAX_VMEM_V = 1024
+
+
+def _neumann_kernel(w_ref, b_ref, o_ref, *, hops: int, tol: float):
+    """One grid step: propagate one batch element's RHS through W = M^T."""
+    b = b_ref[...]  # [1, Vp]
+    w = w_ref[...]  # [Vp, Vp]
+
+    def body(_, carry):
+        x, done = carry
+        x_new = b + jnp.dot(x, w, preferred_element_type=jnp.float32)
+        resid = jnp.max(jnp.abs(x_new - x))
+        scale = jnp.max(jnp.abs(x_new)) + 1e-30
+        done_new = jnp.logical_or(done, resid <= tol * scale)
+        return jnp.where(done, x, x_new), done_new
+
+    x, _ = jax.lax.fori_loop(0, hops, body, (b, jnp.bool_(False)))
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("hops", "tol", "interpret"))
+def neumann_solve_pallas(
+    m: jax.Array,
+    b: jax.Array,
+    *,
+    hops: int,
+    tol: float = 1e-6,
+    interpret: bool = False,
+) -> jax.Array:
+    """x = (I - m)^{-1} b (truncated Neumann) for m: [N, V, V], b: [N, V].
+
+    The V axis is zero-padded to a lane multiple; padded coordinates carry
+    zero source and zero coupling, so they stay exactly zero through every
+    hop and never contaminate the valid region.
+    """
+    n_batch, v, v2 = m.shape
+    assert v == v2 and b.shape == (n_batch, v), (m.shape, b.shape)
+    assert v <= MAX_VMEM_V, (
+        f"V={v} exceeds the single-tile VMEM budget (max {MAX_VMEM_V}); "
+        "tile the operator over K before raising this limit"
+    )
+    m = m.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    pad_v = (-v) % LANE
+    vp = v + pad_v
+    w = jnp.pad(jnp.swapaxes(m, -1, -2), ((0, 0), (0, pad_v), (0, pad_v)))
+    b_p = jnp.pad(b, ((0, 0), (0, pad_v)))
+
+    out = pl.pallas_call(
+        functools.partial(_neumann_kernel, hops=hops, tol=tol),
+        grid=(n_batch,),
+        in_specs=[
+            pl.BlockSpec((None, vp, vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, vp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, vp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_batch, vp), jnp.float32),
+        compiler_params=_COMPILER_PARAMS_CLS(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(w, b_p)
+    return out[:, :v]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the truncated-Neumann propagation solve.
+
+Under loop-free forwarding Phi is nilpotent (Phi^p = 0 with p bounded by the
+longest forwarding path + 1), so
+
+    (I - M) x = b        ==>        x = sum_{m=0}^{H} M^m b
+
+exactly, for any H >= p - 1. The oracle below evaluates the series by the
+equivalent propagation recurrence x_{m+1} = b + M x_m (x_0 = b), which is
+what the production paths (ops.py / kernel.py) implement with an early-exit
+residual check. This file keeps the fixed-hop, no-early-exit form so tests
+can compare both production paths against a dead-simple reference and
+against `jnp.linalg.solve`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def neumann_solve_ref(m: jax.Array, b: jax.Array, hops: int) -> jax.Array:
+    """x = sum_{k=0}^{hops} m^k b via `hops` propagation steps.
+
+    m: [..., V, V] propagation operator, b: [..., V]. Batch dims broadcast.
+    """
+    x = b
+    for _ in range(hops):
+        x = b + jnp.einsum("...ij,...j->...i", m, x)
+    return x
+
+
+def lu_solve_ref(m: jax.Array, b: jax.Array) -> jax.Array:
+    """(I - m)^{-1} b by dense LU — the pre-propagation reference path."""
+    n = m.shape[-1]
+    eye = jnp.eye(n, dtype=m.dtype)
+    return jnp.linalg.solve(eye - m, b[..., None])[..., 0]

@@ -47,6 +47,20 @@ def main(argv=None) -> int:
     ap.add_argument("--t-phi", type=int, default=10)
     ap.add_argument("--round-to", type=int, default=8)
     ap.add_argument("--shard", action="store_true")
+    ap.add_argument(
+        "--solver",
+        choices=("neumann", "lu"),
+        default="neumann",
+        help="linear fixed-point path: hop-capped Neumann propagation "
+        "(default) or dense LU reference",
+    )
+    ap.add_argument(
+        "--chunk-size",
+        type=int,
+        default=None,
+        help="split fleets larger than this into fixed-B chunks sharing one "
+        "compiled (V, A, B) program",
+    )
     args = ap.parse_args(argv)
 
     if args.scenario:
@@ -68,12 +82,15 @@ def main(argv=None) -> int:
         t_phi=args.t_phi,
         round_to=args.round_to,
         shard=args.shard,
+        solver=args.solver,
+        chunk_size=args.chunk_size,
     )
     dt = time.time() - t0
     print(
         json.dumps(
             {
                 "method": res.method,
+                "solver": args.solver,
                 "instances": res.n_instances,
                 "wall_s": round(dt, 2),
                 "inst_per_s": round(res.n_instances / dt, 3),

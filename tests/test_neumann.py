@@ -1,0 +1,275 @@
+"""Tests for the nilpotent-propagation solver path (kernels/neumann + the
+core solver switch): the nilpotency contract (Neumann == LU on loop-free
+forwarding states, including padded phantom rows), kernel/oracle agreement,
+differentiability through custom_linear_solve, and hop-bound plumbing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _optional_deps import given, settings, st
+
+from repro.core import (
+    SCENARIOS,
+    forwarding_sweep,
+    infer_hop_bound,
+    objective,
+    random_connected,
+    stage_traffic,
+    structured_init,
+    with_hop_bound,
+)
+from repro.core.marginals import cost_to_go
+from repro.fleet import pad_problem, stack_problems, unify_hop_bound
+from repro.kernels.neumann import (
+    effective_hops,
+    lu_solve_ref,
+    neumann_solve,
+    neumann_solve_ref,
+)
+from repro.kernels.neumann.kernel import neumann_solve_pallas
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _nilpotent_batch(rng, n_batch, v, density=0.3):
+    """Strictly-upper-triangular (provably nilpotent) random operators."""
+    m = np.triu(rng.uniform(0.0, 1.0, (n_batch, v, v)).astype(np.float32), 1)
+    m *= rng.rand(n_batch, v, v) < density
+    return jnp.asarray(m)
+
+
+# ---------------------------------------------------------------------------
+# Subsystem: oracle / XLA / Pallas agreement on nilpotent operators
+# ---------------------------------------------------------------------------
+class TestNeumannSubsystem:
+    def test_all_paths_match_lu(self):
+        rng = np.random.RandomState(0)
+        m = _nilpotent_batch(rng, 5, 23)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (5, 23)).astype(np.float32))
+        want = lu_solve_ref(m, b)
+        scale = float(jnp.max(jnp.abs(want)))
+        for got in (
+            neumann_solve_ref(m, b, hops=24),
+            neumann_solve(m, b, hops=24),
+            neumann_solve_pallas(m, b, hops=24, interpret=True),
+        ):
+            np.testing.assert_allclose(
+                np.asarray(got) / scale, np.asarray(want) / scale, atol=1e-5
+            )
+
+    def test_early_exit_matches_full_hops(self):
+        """The residual early-exit must not change the converged answer."""
+        rng = np.random.RandomState(1)
+        m = _nilpotent_batch(rng, 3, 17)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (3, 17)).astype(np.float32))
+        # Generous cap: early exit fires as soon as the series is summed.
+        got = neumann_solve(m, b, hops=500)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(lu_solve_ref(m, b)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_contractive_cycles_converge(self):
+        """Transient blocking-rule cycles (gain < 1) still solve correctly —
+        the geometric-tail regime the hop slack exists for."""
+        rng = np.random.RandomState(2)
+        v = 12
+        m = np.array(_nilpotent_batch(rng, 1, v, density=0.5))[0]
+        # Real phi rows are substochastic (sum <= 1, Eq. 2) — normalize,
+        # then close a cycle with an improper-link-sized back edge.
+        m /= np.maximum(m.sum(axis=1, keepdims=True), 1.0)
+        m[v - 1, 0] = 0.4
+        mj = jnp.asarray(m)[None]
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (1, v)).astype(np.float32))
+        got = neumann_solve(mj, b, hops=effective_hops(v + 2, v))
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(lu_solve_ref(mj, b)), rtol=1e-4
+        )
+
+    def test_small_magnitude_element_not_truncated(self):
+        """Convergence must be judged per batch element: a huge
+        fast-converging element must not early-exit a tiny slow-converging
+        one (regression: the residual check was batch-global)."""
+        v = 24
+        chain = np.zeros((v, v), np.float32)
+        for i in range(v - 1):
+            chain[i, i + 1] = 1.0  # full-length propagation chain
+        m = jnp.asarray(np.stack([np.zeros((v, v), np.float32), chain.T]))
+        b = np.zeros((2, v), np.float32)
+        b[0, 0] = 1e6      # converges after one hop
+        b[1, 0] = 1e-3     # needs all v-1 hops to reach the far end
+        b = jnp.asarray(b)
+        got = neumann_solve(m, b, hops=v + 1)
+        want = lu_solve_ref(m, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+        assert float(got[1, v - 1]) == pytest.approx(1e-3, rel=1e-4)
+
+    def test_grad_matches_lu(self):
+        """custom_linear_solve routes cotangents through a transpose solve."""
+        rng = np.random.RandomState(3)
+        m = _nilpotent_batch(rng, 2, 11)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (2, 11)).astype(np.float32))
+        g_ne = jax.grad(lambda x: jnp.sum(neumann_solve(m, x, hops=12) ** 2))(b)
+        g_lu = jax.grad(lambda x: jnp.sum(lu_solve_ref(m, x) ** 2))(b)
+        np.testing.assert_allclose(np.asarray(g_ne), np.asarray(g_lu), rtol=1e-3)
+        gm_ne = jax.grad(lambda x: jnp.sum(neumann_solve(x, b, hops=12)))(m)
+        gm_lu = jax.grad(lambda x: jnp.sum(lu_solve_ref(x, b)))(m)
+        np.testing.assert_allclose(
+            np.asarray(gm_ne), np.asarray(gm_lu), rtol=1e-3, atol=1e-4
+        )
+
+    def test_vmap_fleet_axis(self):
+        rng = np.random.RandomState(4)
+        m = _nilpotent_batch(rng, 6, 9).reshape(2, 3, 9, 9)
+        b = jnp.asarray(rng.uniform(0.0, 1.0, (2, 3, 9)).astype(np.float32))
+        got = jax.vmap(lambda mm, bb: neumann_solve(mm, bb, hops=10))(m, b)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(lu_solve_ref(m, b)), rtol=1e-4, atol=1e-5
+        )
+
+    def test_pallas_lane_padding_inert(self):
+        """V not a lane multiple: padded coordinates must stay exactly zero."""
+        rng = np.random.RandomState(5)
+        m = _nilpotent_batch(rng, 2, 37)
+        b = jnp.asarray(rng.uniform(0.0, 1.0, (2, 37)).astype(np.float32))
+        got = neumann_solve_pallas(m, b, hops=38, interpret=True)
+        assert got.shape == (2, 37)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(lu_solve_ref(m, b)), rtol=1e-4, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# Hop-bound plumbing
+# ---------------------------------------------------------------------------
+class TestHopBound:
+    def test_scenarios_carry_bound(self):
+        for name, make in SCENARIOS.items():
+            p = make()
+            assert p.hop_bound is not None, name
+            assert 3 <= p.hop_bound <= p.net.n_nodes + 2, (name, p.hop_bound)
+
+    def test_infer_matches_known_diameter(self):
+        p = SCENARIOS["mesh"]()  # 5x5 grid: diameter 8
+        assert infer_hop_bound(p.net) == 10
+
+    def test_with_hop_bound_is_idempotent(self):
+        p = SCENARIOS["iot"]()
+        assert with_hop_bound(p) is p
+
+    def test_effective_hops_floor_and_slack(self):
+        from repro.kernels.neumann import NEUMANN_SLACK
+
+        # The nilpotency-index bound V + 1 floors the cap (refined multipath
+        # paths may exceed the diameter); larger carried bounds win.
+        assert effective_hops(None, 16) == 16 + 1 + NEUMANN_SLACK
+        assert effective_hops(5, 16) == 16 + 1 + NEUMANN_SLACK
+        assert effective_hops(40, 16) == 40 + NEUMANN_SLACK
+        # The fused kernel's fixed loop skips the V + 1 floor (every hop
+        # executes, so the floor would cost O(V^3) wasted matvecs).
+        assert effective_hops(5, 16, fixed_loop=True) == 5 + NEUMANN_SLACK
+        assert effective_hops(None, 16, fixed_loop=True) == 17 + NEUMANN_SLACK
+
+    def test_padding_preserves_bound(self):
+        p = SCENARIOS["iot"]()
+        padded, _ = pad_problem(p, p.net.n_nodes + 9, p.apps.n_apps + 3)
+        assert padded.hop_bound == p.hop_bound
+
+    def test_stacking_unifies_bound(self):
+        fleet = [SCENARIOS["iot"](), SCENARIOS["mesh"]()]
+        hb = unify_hop_bound(fleet)
+        assert hb == max(p.hop_bound for p in fleet)
+        stacked, _ = stack_problems(fleet)
+        assert stacked.hop_bound == hb
+
+
+# ---------------------------------------------------------------------------
+# The nilpotency contract on real forwarding states (the tentpole's parity
+# guarantee): SP-tree init + blocking-rule-refined phi give Neumann == LU.
+# ---------------------------------------------------------------------------
+def _traffic_both(problem, state):
+    t_ne = stage_traffic(problem, state, solver="neumann")
+    t_lu = stage_traffic(problem, state, solver="lu")
+    return np.asarray(t_ne), np.asarray(t_lu)
+
+
+class TestNilpotencyContract:
+    @given(st.integers(8, 18), st.integers(0, 10_000), st.integers(0, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_traffic_and_cost_to_go_match_lu(self, n, seed, sweeps):
+        """Random SP-tree phi, refined by `sweeps` blocking-rule sweeps:
+        both fixed points agree with dense LU to rtol 1e-5."""
+        p = random_connected(n, max(2, n // 3), seed=seed, load_scale=0.6)
+        s = structured_init(p)
+        for _ in range(sweeps):
+            s = forwarding_sweep(p, s, alpha=0.5)
+        t_ne, t_lu = _traffic_both(p, s)
+        scale = np.max(np.abs(t_lu)) + 1e-30
+        np.testing.assert_allclose(t_ne / scale, t_lu / scale, atol=1e-5)
+        q_ne = np.asarray(cost_to_go(p, s, solver="neumann")[0])
+        q_lu = np.asarray(cost_to_go(p, s, solver="lu")[0])
+        qs = np.max(np.abs(q_lu)) + 1e-30
+        np.testing.assert_allclose(q_ne / qs, q_lu / qs, atol=1e-5)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=6, deadline=None)
+    def test_contract_holds_with_padded_phantom_rows(self, seed):
+        """Padded phantom apps/nodes (zero mass, zero rate) must not perturb
+        the propagation solve relative to LU."""
+        p = random_connected(11, 5, seed=seed, load_scale=0.6)
+        padded, _ = pad_problem(p, 16, 9)
+        s = structured_init(padded)
+        s = forwarding_sweep(padded, s, alpha=0.5)
+        t_ne, t_lu = _traffic_both(padded, s)
+        scale = np.max(np.abs(t_lu)) + 1e-30
+        np.testing.assert_allclose(t_ne / scale, t_lu / scale, atol=1e-5)
+        # phantom coordinates stay exactly zero on the propagation path
+        a, v = p.apps.n_apps, p.net.n_nodes
+        assert float(np.max(np.abs(t_ne[a:]))) == 0.0
+        assert float(np.max(np.abs(t_ne[:, :, v:]))) == 0.0
+
+    def test_objective_parity_on_paper_scenarios(self):
+        for name, make in SCENARIOS.items():
+            p = make()
+            s = structured_init(p)
+            for _ in range(3):
+                s = forwarding_sweep(p, s, alpha=0.5)
+            J_ne, _ = objective(p, s, solver="neumann")
+            J_lu, _ = objective(p, s, solver="lu")
+            np.testing.assert_allclose(
+                float(J_ne), float(J_lu), rtol=1e-5, err_msg=name
+            )
+
+
+# ---------------------------------------------------------------------------
+# Fleet chunking rides the same solver path
+# ---------------------------------------------------------------------------
+class TestFleetChunking:
+    def test_chunked_matches_unchunked(self):
+        from repro.fleet import sample_fleet, solve_fleet
+
+        fleet = sample_fleet(5, seed=17)
+        kw = dict(m_max=3, t_phi=3)
+        full = solve_fleet(fleet, **kw)
+        chunked = solve_fleet(fleet, chunk_size=2, **kw)
+        np.testing.assert_allclose(chunked.J, full.J, rtol=1e-3)
+        assert chunked.n_instances == len(fleet)
+        assert chunked.history.shape == full.history.shape
+        # per-instance reporting works across chunk boundaries
+        rows = chunked.per_instance()
+        assert len(rows) == len(fleet)
+        for row, p, mask in zip(rows, fleet, chunked.node_mask):
+            n_real = int(mask.sum())
+            assert len(row["hosts"]) == p.apps.n_apps
+            assert max(max(h) for h in row["hosts"]) < n_real
+
+    def test_hosts_clamped_against_node_mask(self):
+        from repro.fleet import solve_fleet
+
+        p = random_connected(9, 4, seed=23)
+        res = solve_fleet([p, SCENARIOS["iot"]()], m_max=2, t_phi=3)
+        # Forge a padded-envelope host leak; per_instance must clamp + flag.
+        res.hosts[0, 0, 0] = res.node_mask.shape[1] - 1
+        rows = res.per_instance()
+        n_real = int(res.node_mask[0].sum())
+        assert rows[0]["padded_host_leaks"] == 1
+        assert max(max(h) for h in rows[0]["hosts"]) < n_real
