@@ -4,9 +4,11 @@ Validates: ALT lowest across the load range; the absolute gap to every
 baseline widens as the system becomes more heavily loaded (the regime where
 congestion awareness matters most).
 
-The whole sweep runs on the fleet engine: the five load scales form one
-batched problem ensemble per method (4 batched solves total) instead of the
-former 20 sequential `solve_*` calls."""
+The whole sweep runs on the shared round engine (core/engine.py): the five
+load scales form one batched problem ensemble per method (4 batched solves
+total) instead of the former 20 sequential `solve_*` calls, and each solve's
+while_loop exits as soon as all five operating points have converged rather
+than burning the full m_max=30 budget."""
 from __future__ import annotations
 
 import json
@@ -23,6 +25,8 @@ def run(print_fn=print) -> dict:
     per_method = {
         m: solve_fleet(fleet, method=m, m_max=30, t_phi=10) for m in METHODS
     }
+    rounds = {m: r.rounds for m, r in per_method.items()}
+    print_fn(f"fig4,engine rounds executed (of m_max=30): {rounds}")
     out = {}
     for i, f in enumerate(SCALES):
         out[str(f)] = {m: float(per_method[m].J[i]) for m in METHODS}

@@ -3,15 +3,27 @@ the framework-level benches. Prints `name,<payload>` lines and exits nonzero
 if any paper claim fails.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig4,...] [--json-out]
+        [--check-trend] [--trend-tol 0.2] [--trend-metrics all|ratios]
 
 `--json-out` persists each bench's result dict as `BENCH_<name>.json` at the
 repo root (commit hash + timings + speedups), so the perf trajectory is
-tracked PR-over-PR and CI can upload the files as artifacts.
+tracked PR-over-PR and CI can upload the files as artifacts. Under
+SCALE_SMALL=1 the file is `BENCH_<name>.small.json` instead: small-tier
+smoke numbers must never overwrite (or be compared against) the full-scale
+trajectory.
+
+`--check-trend` is the trend-lint: it compares the fresh result against the
+committed baseline JSON for the same scale tier and exits nonzero on a
+>`--trend-tol` (default 20%) regression of any per-round timing (lower is
+better) or speedup/ratio metric (higher is better). `--trend-metrics ratios`
+restricts the check to machine-portable speedups/ratios — what CI uses,
+since raw per-round milliseconds are only comparable on similar hardware.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import subprocess
 import sys
@@ -45,6 +57,16 @@ BENCHES = {
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+def _scale_tier() -> str:
+    return "small" if os.environ.get("SCALE_SMALL") else "full"
+
+
+def bench_json_path(name: str) -> pathlib.Path:
+    """Per-tier result file: small-tier smoke runs get their own baseline."""
+    suffix = "" if _scale_tier() == "full" else ".small"
+    return REPO_ROOT / f"BENCH_{name}{suffix}.json"
+
+
 def _commit_hash() -> str:
     try:
         return subprocess.run(
@@ -59,17 +81,72 @@ def _commit_hash() -> str:
 
 
 def write_json(name: str, payload, elapsed_s: float) -> pathlib.Path:
-    """Persist one bench result as BENCH_<name>.json at the repo root."""
-    path = REPO_ROOT / f"BENCH_{name}.json"
+    """Persist one bench result as BENCH_<name>[.small].json at the repo root."""
+    path = bench_json_path(name)
     record = {
         "bench": name,
         "commit": _commit_hash(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "scale": _scale_tier(),
         "elapsed_s": round(elapsed_s, 2),
         "result": payload,
     }
     path.write_text(json.dumps(record, indent=1, default=str) + "\n")
     return path
+
+
+# ---------------------------------------------------------------------------
+# Trend lint: fresh timings vs the committed BENCH_<name>.json baseline
+# ---------------------------------------------------------------------------
+def trend_metrics(result, prefix: str = "") -> dict:
+    """Extract comparable metric leaves: {dotted.path: (value, direction)}.
+
+    direction "lower" — per-round / per-op timings (path contains
+    "per_round", or the key is a microsecond/millisecond reading); raw
+    end-to-end seconds are deliberately excluded as too noisy.
+    direction "higher" — speedups and ratios, which are machine-portable.
+    """
+    out = {}
+    if isinstance(result, dict):
+        for k, v in result.items():
+            out.update(trend_metrics(v, f"{prefix}{k}."))
+        return out
+    if not isinstance(result, (int, float)) or isinstance(result, bool):
+        return out
+    path = prefix.rstrip(".")
+    key = path.rsplit(".", 1)[-1]
+    if "speedup" in key or "ratio" in key:
+        out[path] = (float(result), "higher")
+    elif "per_round" in path or key.endswith(("_ms", "_us")):
+        out[path] = (float(result), "lower")
+    return out
+
+
+def check_trend(
+    name: str, fresh, baseline_record, *, tol: float, ratios_only: bool
+) -> list[str]:
+    """Compare one fresh result dict to its committed baseline record.
+
+    Returns human-readable regression strings (empty = clean)."""
+    base = trend_metrics(baseline_record.get("result", {}))
+    new = trend_metrics(fresh)
+    regressions = []
+    for path, (b_val, direction) in sorted(base.items()):
+        if path not in new:
+            continue
+        if ratios_only and direction != "higher":
+            continue
+        n_val, _ = new[path]
+        if direction == "lower":
+            bad = n_val > b_val * (1.0 + tol)
+        else:
+            bad = n_val < b_val * (1.0 - tol)
+        arrow = f"{b_val:.4g} -> {n_val:.4g} ({(n_val / b_val - 1) * 100:+.0f}%)"
+        status = "REGRESSION" if bad else "ok"
+        print(f"trend,{name} {path}: {arrow} [{status}]", flush=True)
+        if bad:
+            regressions.append(f"{name}:{path} {arrow}")
+    return regressions
 
 
 def main() -> int:
@@ -78,17 +155,56 @@ def main() -> int:
     ap.add_argument(
         "--json-out",
         action="store_true",
-        help="write BENCH_<name>.json (commit hash + result dict) per bench",
+        help="write BENCH_<name>[.small].json (commit hash + result dict)",
+    )
+    ap.add_argument(
+        "--check-trend",
+        action="store_true",
+        help="fail on >--trend-tol regressions vs the committed baseline "
+        "JSON of the same scale tier",
+    )
+    ap.add_argument(
+        "--trend-tol",
+        type=float,
+        default=0.2,
+        help="fractional regression tolerance for --check-trend (default 0.2)",
+    )
+    ap.add_argument(
+        "--trend-metrics",
+        choices=("all", "ratios"),
+        default="all",
+        help="'ratios' compares only speedups/ratios (machine-portable; "
+        "use in CI where absolute timings are not comparable)",
     )
     args = ap.parse_args()
     names = list(BENCHES) if not args.only else args.only.split(",")
     failures = []
+    regressions = []
     for name in names:
+        # Read the committed baseline BEFORE --json-out overwrites it.
+        baseline = None
+        if args.check_trend and bench_json_path(name).exists():
+            baseline = json.loads(bench_json_path(name).read_text())
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
         try:
             result = BENCHES[name]()
             elapsed = time.time() - t0
+            if args.check_trend and result is not None:
+                if baseline is None:
+                    print(
+                        f"trend,{name} no committed baseline for tier "
+                        f"'{_scale_tier()}' — skipping",
+                        flush=True,
+                    )
+                else:
+                    regressions += check_trend(
+                        name,
+                        result,
+                        baseline,
+                        tol=args.trend_tol,
+                        ratios_only=args.trend_metrics == "ratios",
+                    )
             if args.json_out and result is not None:
                 path = write_json(name, result, elapsed)
                 print(f"wrote {path.relative_to(REPO_ROOT)}", flush=True)
@@ -99,6 +215,11 @@ def main() -> int:
     if failures:
         print(f"FAILED: {failures}")
         return 1
+    if regressions:
+        print("TREND REGRESSIONS (>{:.0%}):".format(args.trend_tol))
+        for r in regressions:
+            print(f"  {r}")
+        return 2
     print("all benchmarks passed")
     return 0
 

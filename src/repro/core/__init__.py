@@ -25,10 +25,19 @@ from .flow import (  # noqa: F401
 from .forwarding import forwarding_sweep, forwarding_update  # noqa: F401
 from .marginals import cost_to_go, link_marginals, round_eval  # noqa: F401
 from .placement import placement_update, repair_phi, structured_init  # noqa: F401
+from .engine import (  # noqa: F401
+    EngineCarry,
+    engine_solve,
+    engine_solve_single,
+    round_step,
+    stack_single,
+)
 from .alt import (  # noqa: F401
     ALL_METHODS,
+    METHOD_KWARGS,
     Result,
     compare_all,
+    method_kwargs,
     solve_alt,
     solve_colocated,
     solve_congunaware,

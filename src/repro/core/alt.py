@@ -8,23 +8,27 @@
 All four share the structured initialization so comparisons isolate exactly
 one design axis each (alternation / congestion awareness / split flexibility).
 
-Per-round dataflow (DESIGN.md section 10): each round ends with ONE full
-marginal evaluation (`round_eval`) whose objective read-out drives the
-history/stall logic and whose (q, dp, kappa, t, F, G) tuple is handed to the
-next round's placement sweep — placement and the round-final objective no
-longer redo the same traffic solve. `solver` selects the fixed-point path:
-"neumann" (default, hop-capped propagation) or "lu" (dense reference).
+The iterative methods (ALT, OneShot, CoLocated) are thin wrappers over the
+shared device-resident round engine (core/engine.py): the whole alternating
+loop — placement sweep fed by the previous round's `round_eval`, T_phi
+forwarding sweeps, best-iterate tracking, tol/patience stall logic — runs as
+ONE jitted `lax.while_loop` at B=1 and exits the moment the instance stalls.
+There is no per-round host sync any more: the only device->host transfer is
+the final result read-out. The batched fleet solver (fleet/solve.py) runs
+the exact same engine at B>1, so sequential and fleet can never diverge.
+
+`solver` selects the fixed-point path: "neumann" (default, hop-capped
+propagation) or "lu" (dense reference). See DESIGN.md sections 10-11.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
+import numpy as np
 
+from .engine import engine_solve_single
 from .flow import objective
-from .forwarding import forwarding_update
-from .marginals import round_eval
-from .placement import placement_update, structured_init
+from .placement import structured_init
 from .structs import CostModel, Problem, State
 
 
@@ -57,6 +61,22 @@ def _result(problem, state, aux, name, history, iters) -> Result:
     )
 
 
+def _engine_result(problem: Problem, name: str, **engine_kw) -> Result:
+    """Run the shared round engine at B=1 and package a sequential Result."""
+    out = engine_solve_single(problem, **engine_kw)
+    history = np.asarray(out["history"])
+    history = history[~np.isnan(history)]
+    return Result(
+        name=name,
+        state=out["state"],
+        J=float(out["J"]),
+        J_comm=float(out["J_comm"]),
+        J_comp=float(out["J_comp"]),
+        history=[float(h) for h in history],
+        iters=int(out["iters"]),
+    )
+
+
 def solve_alt(
     problem: Problem,
     *,
@@ -75,39 +95,23 @@ def solve_alt(
     One outer round = placement reassignment under the current congested
     marginals, then T_phi forwarding sweeps (a cyclic rotation of Algorithm
     1's line order so J is always measured on smoothed routing). Terminates
-    when the best J stops improving by tol for `patience` rounds.
+    when the best J stops improving by tol for `patience` rounds — via the
+    engine's batch-wide early exit, which at B=1 is exactly the sequential
+    per-instance break.
     """
-    state = structured_init(problem, colocate=colocate, use_pallas=use_pallas)
-    J, aux = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
-    best_state, best_J, best_aux = state, float(J), aux
-    history = [float(J)]
-    iters = 0
-    stall = 0
-    for m in range(m_max):
-        state = placement_update(
-            problem,
-            state,
-            aux["ctg"],
-            colocate=colocate,
-            use_pallas=use_pallas,
-            solver=solver,
-        )
-        state = forwarding_update(
-            problem, state, t_phi=t_phi, alpha=alpha, solver=solver
-        )
-        J, aux = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
-        jf = float(J)
-        history.append(jf)
-        iters = m + 1
-        if jf < best_J * (1.0 - tol):
-            stall = 0
-        else:
-            stall += 1
-        if jf < best_J:
-            best_state, best_J, best_aux = state, jf, aux
-        if stall >= patience:
-            break
-    return _result(problem, best_state, best_aux, name, history, iters)
+    return _engine_result(
+        problem,
+        name,
+        m_max=m_max,
+        t_phi=t_phi,
+        alpha=alpha,
+        tol=tol,
+        patience=patience,
+        colocate=colocate,
+        track_best=True,
+        use_pallas=use_pallas,
+        solver=solver,
+    )
 
 
 def solve_oneshot(
@@ -118,15 +122,23 @@ def solve_oneshot(
     use_pallas: bool = False,
     solver: str = "neumann",
 ) -> Result:
-    """One placement/forwarding round: isolates the value of alternation."""
-    state = structured_init(problem, use_pallas=use_pallas)
-    J0, aux0 = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
-    state = placement_update(
-        problem, state, aux0["ctg"], use_pallas=use_pallas, solver=solver
+    """One placement/forwarding round: isolates the value of alternation.
+
+    The engine at m_max=1 with `track_best=False` (the final — i.e. only —
+    iterate is returned, matching the historical OneShot semantics)."""
+    return _engine_result(
+        problem,
+        "OneShot",
+        m_max=1,
+        t_phi=t_phi,
+        alpha=alpha,
+        tol=1e-3,
+        patience=1,
+        colocate=False,
+        track_best=False,
+        use_pallas=use_pallas,
+        solver=solver,
     )
-    state = forwarding_update(problem, state, t_phi=t_phi, alpha=alpha, solver=solver)
-    J1, aux1 = round_eval(problem, state, solver=solver, use_pallas=use_pallas)
-    return _result(problem, state, aux1, "OneShot", [float(J0), float(J1)], 1)
 
 
 def linearize(problem: Problem) -> Problem:
@@ -175,7 +187,7 @@ def solve_colocated(
     solver: str = "neumann",
 ) -> Result:
     """Both partitions at a single node; forwarding still congestion-aware."""
-    res = solve_alt(
+    return solve_alt(
         problem,
         m_max=m_max,
         t_phi=t_phi,
@@ -187,7 +199,6 @@ def solve_colocated(
         solver=solver,
         name="CoLocated",
     )
-    return res
 
 
 ALL_METHODS = {
@@ -197,28 +208,39 @@ ALL_METHODS = {
     "CoLocated": solve_colocated,
 }
 
+# The one shared source of truth for which solver kwargs each method accepts.
+# `compare_all` and the fleet's `solve_sequential` both filter through this,
+# so the sequential and fleet baselines cannot drift apart by hand-copied
+# per-method defaults (the pre-PR-3 bug: `m_max` was forwarded to CoLocated
+# but `tol`/`patience` were not).
+METHOD_KWARGS = {
+    "ALT": ("m_max", "t_phi", "alpha", "tol", "patience", "use_pallas", "solver"),
+    "OneShot": ("t_phi", "alpha", "use_pallas", "solver"),
+    "CongUnaware": ("use_pallas", "solver"),
+    "CoLocated": ("m_max", "t_phi", "alpha", "tol", "patience", "use_pallas", "solver"),
+}
+
+
+def validate_solver_kwargs(kw: dict) -> None:
+    """Reject kwargs no method accepts — a typo must raise, never silently
+    run with defaults."""
+    unknown = set(kw) - set().union(*METHOD_KWARGS.values())
+    if unknown:
+        raise TypeError(f"unknown solver kwargs {sorted(unknown)}")
+
+
+def method_kwargs(method: str, kw: dict) -> dict:
+    """Restrict one shared (validated) kwargs dict to what `method` accepts."""
+    validate_solver_kwargs(kw)
+    return {k: v for k, v in kw.items() if k in METHOD_KWARGS[method]}
+
 
 def compare_all(problem: Problem, **kw) -> dict:
-    out = {}
-    out["ALT"] = solve_alt(problem, **kw)
-    out["OneShot"] = solve_oneshot(
-        problem,
-        t_phi=kw.get("t_phi", 10),
-        alpha=kw.get("alpha", 0.5),
-        use_pallas=kw.get("use_pallas", False),
-        solver=kw.get("solver", "neumann"),
-    )
-    out["CongUnaware"] = solve_congunaware(
-        problem,
-        use_pallas=kw.get("use_pallas", False),
-        solver=kw.get("solver", "neumann"),
-    )
-    out["CoLocated"] = solve_colocated(
-        problem,
-        m_max=kw.get("m_max", 30),
-        t_phi=kw.get("t_phi", 10),
-        alpha=kw.get("alpha", 0.5),
-        use_pallas=kw.get("use_pallas", False),
-        solver=kw.get("solver", "neumann"),
-    )
-    return out
+    """Run all four methods on one shared kwargs dict.
+
+    Unknown kwargs raise (they would previously have been silently dropped
+    for every method but ALT)."""
+    return {
+        name: fn(problem, **method_kwargs(name, kw))
+        for name, fn in ALL_METHODS.items()
+    }

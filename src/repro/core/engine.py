@@ -1,0 +1,261 @@
+"""Device-resident ALT round engine: ONE `while_loop` core behind both the
+sequential solvers (core/alt.py) and the batched fleet solver (fleet/solve.py).
+
+The paper's Algorithm 1 is a single alternating loop (placement sweep ->
+T_phi forwarding sweeps -> objective). This module is the one place that
+loop lives: a pure `round_step(carry) -> carry` implementing the restructured
+round dataflow (one `round_eval` feeding both the history/stall logic and the
+next placement sweep — DESIGN.md section 10), plus best-iterate tracking,
+per-instance stall counters, and freeze masking, all carried on device.
+
+`engine_solve` wraps `round_step` in a jitted `lax.while_loop` whose
+predicate is "any live instance below m_max": a fully converged batch — or
+the B=1 sequential case — exits as soon as every instance has stalled,
+instead of padding to `m_max` rounds the way the old fixed-length scan did.
+Because a while_loop cannot stack per-trip outputs, the per-round objective
+trace is written into a preallocated `[B, m_max + 1]` history buffer via a
+dynamic column update; unwritten slots stay NaN (the same "NaN past the
+freeze point" contract the fleet result has always exposed).
+
+Batch semantics (DESIGN.md section 11):
+  * the whole round body is vmapped over the leading instance axis, so a
+    stacked fleet and a single `[1, ...]`-stacked problem run the exact same
+    compiled loop — sequential solving IS the engine at B=1, squeezed;
+  * frozen instances (stalled for `patience` rounds) are masked out of every
+    carry update, so extra trips driven by still-live instances leave their
+    results bit-identical;
+  * the early exit is batch-wide (`jnp.any(active)`), matching the
+    sequential per-instance `break` exactly at B=1 and costing live
+    instances nothing at B>1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .forwarding import forwarding_update
+from .marginals import round_eval
+from .placement import placement_update, structured_init
+from .structs import Problem, State
+
+
+def _bwhere(pred, a, b):
+    """Pytree select with a [B] predicate broadcast from the left."""
+
+    def sel(x, y):
+        p = pred.reshape(pred.shape + (1,) * (x.ndim - pred.ndim))
+        return jnp.where(p, x, y)
+
+    return jax.tree_util.tree_map(sel, a, b)
+
+
+def _objective_of(aux):
+    """The objective split alone — the best-iterate slot never carries the
+    [A, K, V, V]-sized ctg tensors, which would double the loop-carry
+    footprint for nothing."""
+    return {"J": aux["J"], "J_comm": aux["J_comm"], "J_comp": aux["J_comp"]}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCarry:
+    """The while_loop carry: everything one ALT round reads and writes.
+
+    state      : [B, ...] current iterate (placement x + forwarding phi)
+    aux        : `round_eval` output at `state` — objective split plus the
+                 (q, dp, kappa, t, F, G) ctg tuple the next placement sweep
+                 consumes (no re-solve of the traffic fixed point)
+    best_state : [B, ...] best-iterate state seen so far
+    best_obj   : {"J","J_comm","J_comp"} at `best_state`
+    best_J     : [B] running minimum objective
+    stall      : [B] int32 rounds since the last tol-sized improvement
+    iters      : [B] int32 rounds actually applied per instance
+    active     : [B] bool; False once an instance froze (stall >= patience)
+    m          : scalar int32 trip counter (= rounds the while_loop ran)
+    history    : [B, m_max + 1] objective trace; NaN past each freeze point
+    """
+
+    state: State
+    aux: dict
+    best_state: State
+    best_obj: dict
+    best_J: jax.Array
+    stall: jax.Array
+    iters: jax.Array
+    active: jax.Array
+    m: jax.Array
+    history: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    EngineCarry,
+    data_fields=[
+        "state", "aux", "best_state", "best_obj", "best_J", "stall",
+        "iters", "active", "m", "history",
+    ],
+    meta_fields=[],
+)
+
+
+def round_step(
+    problem: Problem,
+    carry: EngineCarry,
+    *,
+    t_phi: int,
+    alpha: float,
+    tol: float,
+    patience: int,
+    colocate: bool,
+    use_pallas: bool,
+    solver: str,
+) -> EngineCarry:
+    """One batched ALT round: Algorithm 1's loop body plus bookkeeping.
+
+    Placement is fed the PREVIOUS round's evaluation (carry.aux["ctg"]),
+    then T_phi forwarding sweeps run, then one `round_eval` closes the round.
+    Stall is measured against the best J *before* this round's update, and
+    every carry slot of a frozen instance is masked back to its old value.
+    """
+
+    def one_round(p, s, ctg):
+        nxt = placement_update(
+            p, s, ctg, colocate=colocate, use_pallas=use_pallas, solver=solver
+        )
+        nxt = forwarding_update(p, nxt, t_phi=t_phi, alpha=alpha, solver=solver)
+        J, aux_nxt = round_eval(p, nxt, solver=solver, use_pallas=use_pallas)
+        return nxt, J, aux_nxt
+
+    nxt, J, aux_nxt = jax.vmap(one_round)(problem, carry.state, carry.aux["ctg"])
+
+    improved = J < carry.best_J * (1.0 - tol)
+    stall_nxt = jnp.where(improved, 0, carry.stall + 1)
+    is_best = J < carry.best_J
+    best_state_nxt = _bwhere(is_best, nxt, carry.best_state)
+    best_obj_nxt = _bwhere(is_best, _objective_of(aux_nxt), carry.best_obj)
+    best_J_nxt = jnp.minimum(J, carry.best_J)
+
+    # Freeze masking: instances that already stalled keep every slot.
+    active = carry.active
+    history = carry.history.at[:, carry.m + 1].set(jnp.where(active, J, jnp.nan))
+    return EngineCarry(
+        state=_bwhere(active, nxt, carry.state),
+        aux=_bwhere(active, aux_nxt, carry.aux),
+        best_state=_bwhere(active, best_state_nxt, carry.best_state),
+        best_obj=_bwhere(active, best_obj_nxt, carry.best_obj),
+        best_J=jnp.where(active, best_J_nxt, carry.best_J),
+        stall=jnp.where(active, stall_nxt, carry.stall),
+        iters=carry.iters + active.astype(jnp.int32),
+        active=active & (stall_nxt < patience),
+        m=carry.m + 1,
+        history=history,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "m_max", "t_phi", "alpha", "tol", "patience", "colocate",
+        "track_best", "use_pallas", "solver",
+    ),
+)
+def engine_solve(
+    stacked: Problem,
+    *,
+    m_max: int,
+    t_phi: int,
+    alpha: float,
+    tol: float,
+    patience: int,
+    colocate: bool = False,
+    track_best: bool = True,
+    use_pallas: bool = False,
+    solver: str = "neumann",
+) -> dict:
+    """Run the alternating method on a stacked `[B, ...]` problem pytree.
+
+    Returns a dict of device arrays (leading axis B throughout):
+      J / J_comm / J_comp : final objective split (best iterate, or the
+                            final state when `track_best=False` — the
+                            OneShot semantics)
+      state               : the returned State (best or final)
+      hosts               : [B, A, 2] partition hosts of `state`
+      history             : [B, m_max + 1] objective trace, NaN past freeze
+      iters               : [B] int32 rounds applied per instance
+      rounds              : scalar int32 while_loop trips actually executed
+                            (< m_max whenever the whole batch froze early)
+    """
+
+    def init_one(p):
+        s = structured_init(p, colocate=colocate, use_pallas=use_pallas)
+        J, aux = round_eval(p, s, solver=solver, use_pallas=use_pallas)
+        return s, J, aux
+
+    state0, J0, aux0 = jax.vmap(init_one)(stacked)
+    batch = J0.shape[0]
+    history0 = jnp.full((batch, m_max + 1), jnp.nan, dtype=J0.dtype)
+    carry = EngineCarry(
+        state=state0,
+        aux=aux0,
+        best_state=state0,
+        best_obj=_objective_of(aux0),
+        best_J=J0,
+        stall=jnp.zeros(batch, jnp.int32),
+        iters=jnp.zeros(batch, jnp.int32),
+        active=jnp.ones(batch, bool),
+        m=jnp.int32(0),
+        history=history0.at[:, 0].set(J0),
+    )
+    step = functools.partial(
+        round_step,
+        stacked,
+        t_phi=t_phi,
+        alpha=alpha,
+        tol=tol,
+        patience=patience,
+        colocate=colocate,
+        use_pallas=use_pallas,
+        solver=solver,
+    )
+    carry = jax.lax.while_loop(
+        lambda c: (c.m < m_max) & jnp.any(c.active), step, carry
+    )
+    if track_best:
+        out_state, out_obj = carry.best_state, carry.best_obj
+    else:
+        out_state, out_obj = carry.state, _objective_of(carry.aux)
+    return {
+        "J": out_obj["J"],
+        "J_comm": out_obj["J_comm"],
+        "J_comp": out_obj["J_comp"],
+        "state": out_state,
+        "hosts": out_state.hosts(),
+        "history": carry.history,
+        "iters": carry.iters,
+        "rounds": carry.m,
+    }
+
+
+def stack_single(problem: Problem) -> Problem:
+    """Lift one problem to a `[1, ...]` stacked pytree (engine batch of one).
+
+    Static metadata (`hop_bound`, `CostModel.kind`) passes through untouched;
+    Python-float cost scalars become rank-1 arrays like `stack_problems`
+    produces, so B=1 and B>1 hit the same engine code path."""
+    return jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], problem)
+
+
+def engine_solve_single(problem: Problem, **kw) -> dict:
+    """Sequential entry point: the engine at B=1, squeezed.
+
+    Same return dict as `engine_solve` minus the batch axis (`rounds` was
+    already a scalar; at B=1 it equals `iters`)."""
+    out = engine_solve(stack_single(problem), **kw)
+    squeezed = {
+        k: jax.tree_util.tree_map(lambda x: x[0], v)
+        for k, v in out.items()
+        if k != "rounds"
+    }
+    squeezed["rounds"] = out["rounds"]
+    return squeezed

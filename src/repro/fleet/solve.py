@@ -1,31 +1,29 @@
 """Batched multi-scenario ALT solving over padded problem ensembles.
 
 `solve_fleet` pads a heterogeneous list of `Problem`s to a common (V, A)
-envelope (fleet/pad.py), stacks them into a single pytree, and runs the
-entire ALT pipeline — structured init, placement reassignment, forwarding
-sweeps, objective — vmapped over the instance axis, with a fixed-iteration
-`lax.scan` outer loop replacing `solve_alt`'s Python loop. The whole fleet
-solve is therefore ONE jitted computation: no per-instance dispatch, no
-retracing per topology, and dense [B, ...] linear algebra throughout.
+envelope (fleet/pad.py), stacks them into a single pytree, and hands the
+stack to the shared device-resident round engine (core/engine.py): the whole
+ALT pipeline — structured init, placement reassignment, forwarding sweeps,
+objective, best-iterate/stall/freeze bookkeeping — runs as ONE jitted
+`lax.while_loop` vmapped over the instance axis. There is no fleet-local
+copy of the loop body any more; the sequential solvers in core/alt.py run
+the exact same engine at B=1, so the two paths share every future fix.
 
 Equivalence contract: for every instance, the returned J matches the
 sequential `solve_alt` on the unpadded problem (same m_max / t_phi / alpha /
-tol / patience / solver) up to float32 rounding. Early stopping is
-reproduced by masking: once an instance's best J has stalled for `patience`
-rounds it is frozen (its carried state stops updating) while the rest of the
-batch keeps iterating — identical results to a per-instance break, at fixed
-compute.
-
-The scan body mirrors core/alt.py's restructured round dataflow: one
-`round_eval` per round feeds both the history/stall logic and the next
-placement sweep, and the linear fixed points run on the propagation solver
-(`solver="neumann"`, default) or dense LU (`solver="lu"`).
+tol / patience / solver) up to float32 rounding — trivially so, since both
+run the same compiled loop. Early stopping is per-instance freeze masking
+inside the engine; on top of that, the while_loop predicate ("any live
+instance below m_max") exits the whole batch early once every instance has
+stalled, instead of burning all `m_max` rounds like the old fixed-length
+scan (`FleetResult.rounds` records the trips actually executed).
 
 Scaling hooks: `shard=True` splits the instance axis over local devices;
 `chunk_size=B` splits very large ensembles into fixed-B chunks that all pad
 to the *global* (V, A) envelope and unified hop bound, so arbitrary fleet
 sizes reuse ONE compiled program per (V, A, B) signature instead of
-compiling one giant batch (DESIGN.md sections 9-10).
+compiling one giant batch (DESIGN.md sections 9-11). Each chunk early-exits
+independently.
 """
 from __future__ import annotations
 
@@ -36,11 +34,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.alt import linearize
+from ..core.alt import ALL_METHODS, linearize, method_kwargs
+from ..core.engine import engine_solve
 from ..core.flow import objective
-from ..core.forwarding import forwarding_update
-from ..core.marginals import round_eval
-from ..core.placement import placement_update, structured_init
+from ..core.placement import structured_init
 from ..core.structs import Problem
 from .pad import PadInfo, fleet_envelope, stack_problems, unify_hop_bound
 
@@ -55,6 +52,8 @@ class FleetResult:
     history             : [B, m_max + 1] outer-iteration J trace; entries
                           after an instance froze are NaN
     iters               : [B] outer iterations actually applied per instance
+    rounds              : outer while_loop trips actually executed (max over
+                          chunks); < m_max whenever every instance froze early
     hosts               : [B, A, 2] chosen partition hosts (padded apps hold
                           meaningless-but-harmless indices)
     node_mask/app_mask  : [B, V] / [B, A] validity masks from padding
@@ -66,6 +65,7 @@ class FleetResult:
     J_comp: np.ndarray
     history: np.ndarray
     iters: np.ndarray
+    rounds: int
     hosts: np.ndarray
     node_mask: np.ndarray
     app_mask: np.ndarray
@@ -104,87 +104,8 @@ class FleetResult:
             f"fleet[{self.method}] B={self.n_instances} "
             f"J: min={self.J.min():.3f} med={np.median(self.J):.3f} "
             f"max={self.J.max():.3f}  iters: {self.iters.min()}-{self.iters.max()}"
+            f"  rounds={self.rounds}"
         )
-
-
-def _tree_where(pred, a, b):
-    return jax.tree_util.tree_map(lambda x, y: jnp.where(pred, x, y), a, b)
-
-
-def _solve_one_iterative(
-    problem: Problem,
-    *,
-    m_max: int,
-    t_phi: int,
-    alpha: float,
-    tol: float,
-    patience: int,
-    colocate: bool,
-    track_best: bool,
-    use_pallas: bool,
-    solver: str,
-) -> dict:
-    """Fixed-iteration scan variant of `solve_alt` for ONE instance.
-
-    Mirrors core/alt.py's restructured loop body exactly (placement fed by
-    the previous round's evaluation -> T_phi forwarding sweeps -> one
-    round_eval, best-iterate tracking, tol/patience stall logic) but with
-    static trip count so it vmaps/jits as a single computation.
-    `track_best=False` reproduces `solve_oneshot`'s final-state semantics.
-    """
-    state0 = structured_init(problem, colocate=colocate, use_pallas=use_pallas)
-    J0, aux0 = round_eval(problem, state0, solver=solver, use_pallas=use_pallas)
-
-    def objective_of(aux):
-        # The best-iterate slot only ever surfaces the objective split —
-        # carrying the full ctg tuple there would double the scan-carry
-        # footprint of the [A, K, V, V]-sized marginal tensors for nothing.
-        return {"J": aux["J"], "J_comm": aux["J_comm"], "J_comp": aux["J_comp"]}
-
-    def step(carry, _):
-        state, aux, best, best_J, stall, iters, active = carry
-        nxt = placement_update(
-            problem, state, aux["ctg"], colocate=colocate, use_pallas=use_pallas,
-            solver=solver,
-        )
-        nxt = forwarding_update(
-            problem, nxt, t_phi=t_phi, alpha=alpha, solver=solver
-        )
-        J, aux_nxt = round_eval(problem, nxt, solver=solver, use_pallas=use_pallas)
-        # Stall bookkeeping against the best J *before* this round's update,
-        # exactly as in solve_alt.
-        improved = J < best_J * (1.0 - tol)
-        stall_nxt = jnp.where(improved, 0, stall + 1)
-        best_nxt = _tree_where(J < best_J, (nxt, objective_of(aux_nxt)), best)
-        best_J_nxt = jnp.minimum(J, best_J)
-        # Frozen instances (early-stopped under masking) keep everything.
-        state = _tree_where(active, nxt, state)
-        aux = _tree_where(active, aux_nxt, aux)
-        best = _tree_where(active, best_nxt, best)
-        best_J = jnp.where(active, best_J_nxt, best_J)
-        stall = jnp.where(active, stall_nxt, stall)
-        iters = iters + active.astype(jnp.int32)
-        hist = jnp.where(active, J, jnp.nan)
-        active = active & (stall < patience)
-        return (state, aux, best, best_J, stall, iters, active), hist
-
-    carry0 = (
-        state0, aux0, (state0, objective_of(aux0)), J0, jnp.int32(0),
-        jnp.int32(0), jnp.bool_(True),
-    )
-    (state, aux, best, _, _, iters, _), hist = jax.lax.scan(
-        step, carry0, None, length=m_max
-    )
-    history = jnp.concatenate([J0[None], hist])
-    out_state, out_aux = best if track_best else (state, aux)
-    return {
-        "J": out_aux["J"],
-        "J_comm": out_aux["J_comm"],
-        "J_comp": out_aux["J_comp"],
-        "hosts": out_state.hosts(),
-        "history": history,
-        "iters": iters,
-    }
 
 
 def _solve_one_congunaware(problem: Problem, *, use_pallas: bool, solver: str) -> dict:
@@ -201,13 +122,15 @@ def _solve_one_congunaware(problem: Problem, *, use_pallas: bool, solver: str) -
     }
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "method", "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
-        "solver",
-    ),
-)
+@functools.partial(jax.jit, static_argnames=("use_pallas", "solver"))
+def _solve_fleet_congunaware(stacked: Problem, *, use_pallas: bool, solver: str):
+    return jax.vmap(
+        functools.partial(
+            _solve_one_congunaware, use_pallas=use_pallas, solver=solver
+        )
+    )(stacked)
+
+
 def _solve_fleet_stacked(
     stacked: Problem,
     *,
@@ -220,14 +143,16 @@ def _solve_fleet_stacked(
     use_pallas: bool,
     solver: str,
 ) -> dict:
-    """vmap the per-instance solver over the stacked instance axis."""
+    """Dispatch one stacked batch onto the shared round engine."""
     if method == "CongUnaware":
-        fn = functools.partial(
-            _solve_one_congunaware, use_pallas=use_pallas, solver=solver
+        out = dict(
+            _solve_fleet_congunaware(stacked, use_pallas=use_pallas, solver=solver)
         )
-    else:
-        fn = functools.partial(
-            _solve_one_iterative,
+        out["rounds"] = jnp.int32(0)
+        return out
+    out = dict(
+        engine_solve(
+            stacked,
             m_max=1 if method == "OneShot" else m_max,
             t_phi=t_phi,
             alpha=alpha,
@@ -238,7 +163,12 @@ def _solve_fleet_stacked(
             use_pallas=use_pallas,
             solver=solver,
         )
-    return jax.vmap(fn)(stacked)
+    )
+    # Drop the full [B, A, K, V, V] State: the fleet result only surfaces
+    # hosts, and a chunked solve would otherwise keep every chunk's phi
+    # buffers alive until the final gather.
+    out.pop("state")
+    return out
 
 
 def _shard_over_devices(stacked: Problem, info: PadInfo, batch: int):
@@ -343,6 +273,7 @@ def solve_fleet(
         J_comp=gather(lambda o, i: o["J_comp"]),
         history=gather(lambda o, i: o["history"]),
         iters=gather(lambda o, i: o["iters"]),
+        rounds=max(int(o["rounds"]) for o in outs),
         hosts=gather(lambda o, i: o["hosts"]),
         node_mask=gather(lambda o, i: i.node_mask),
         app_mask=gather(lambda o, i: i.app_mask),
@@ -350,18 +281,11 @@ def solve_fleet(
 
 
 def solve_sequential(problems, *, method: str = "ALT", **kw) -> list:
-    """Reference path: the pre-fleet per-instance Python loop.
+    """Reference path: per-instance solving through the same engine at B=1.
 
     Used by benchmarks/fleet_bench.py for the batched-vs-sequential speedup
-    and by tests for the equivalence guarantee."""
-    from ..core.alt import ALL_METHODS
-
+    and by tests for the equivalence guarantee. Kwargs are filtered through
+    `core.alt.METHOD_KWARGS` — one shared dict for every method, so the
+    sequential baselines can never diverge from the fleet's."""
     fn = ALL_METHODS[method]
-    if method == "OneShot":
-        kw = {
-            k: v for k, v in kw.items()
-            if k in ("t_phi", "alpha", "use_pallas", "solver")
-        }
-    elif method == "CongUnaware":
-        kw = {k: v for k, v in kw.items() if k in ("use_pallas", "solver")}
-    return [fn(p, **kw) for p in problems]
+    return [fn(p, **method_kwargs(method, kw)) for p in problems]

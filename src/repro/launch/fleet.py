@@ -94,6 +94,10 @@ def main(argv=None) -> int:
                 "instances": res.n_instances,
                 "wall_s": round(dt, 2),
                 "inst_per_s": round(res.n_instances / dt, 3),
+                # while_loop trips actually executed: < m_max means the whole
+                # batch converged and the engine exited early
+                "rounds": res.rounds,
+                "m_max": args.m_max,
                 "summary": res.summary(),
                 "per_instance": res.per_instance(),
             },

@@ -1,0 +1,188 @@
+"""Shared round-engine tests (core/engine.py).
+
+The engine replaced two hand-rolled copies of Algorithm 1's outer loop (the
+host-synced Python loop in core/alt.py and the fixed-length lax.scan in
+fleet/solve.py) with one jitted while_loop. These tests pin:
+
+  * parity — the while_loop path reproduces the pre-refactor Python loop's
+    history / iters / J on all four paper topologies, for ALT and CoLocated,
+    at rtol 1e-5 (the reference loop below IS the deleted solve_alt body);
+  * early exit — the while_loop executes fewer trips than m_max once every
+    instance has stalled, sequentially (B=1) and batched;
+  * freeze masking — once an instance freezes, extra trips driven by
+    still-live instances leave its results bit-identical;
+  * the acceptance scenario — a converged B=12 fleet at the default
+    tol/patience exits before its m_max budget.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    SCENARIOS,
+    forwarding_update,
+    iot,
+    placement_update,
+    round_eval,
+    solve_alt,
+    solve_colocated,
+    structured_init,
+)
+from repro.core.engine import engine_solve, engine_solve_single, stack_single
+from repro.fleet import sample_fleet, solve_fleet, stack_problems
+
+KW = dict(m_max=8, t_phi=5, alpha=0.5, tol=1e-3, patience=3)
+
+
+def _reference_alt(problem, *, m_max, t_phi, alpha, tol, patience, colocate=False):
+    """The pre-refactor `solve_alt` body, verbatim: a host-synced Python loop
+    with a float(J) device->host round-trip every round. Kept here (and only
+    here) as the parity oracle for the engine's while_loop."""
+    state = structured_init(problem, colocate=colocate)
+    J, aux = round_eval(problem, state)
+    best_J, best_aux = float(J), aux
+    history = [float(J)]
+    iters = 0
+    stall = 0
+    for m in range(m_max):
+        state = placement_update(problem, state, aux["ctg"], colocate=colocate)
+        state = forwarding_update(problem, state, t_phi=t_phi, alpha=alpha)
+        J, aux = round_eval(problem, state)
+        jf = float(J)
+        history.append(jf)
+        iters = m + 1
+        if jf < best_J * (1.0 - tol):
+            stall = 0
+        else:
+            stall += 1
+        if jf < best_J:
+            best_J, best_aux = jf, aux
+        if stall >= patience:
+            break
+    return {
+        "J": best_J,
+        "J_comm": float(best_aux["J_comm"]),
+        "J_comp": float(best_aux["J_comp"]),
+        "history": history,
+        "iters": iters,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Parity: while_loop engine == pre-refactor Python loop
+# ---------------------------------------------------------------------------
+class TestParity:
+    @pytest.mark.parametrize("name", list(SCENARIOS))
+    def test_alt_matches_python_loop(self, name):
+        p = SCENARIOS[name]()
+        ref = _reference_alt(p, **KW)
+        got = solve_alt(p, **KW)
+        np.testing.assert_allclose(got.J, ref["J"], rtol=1e-5)
+        np.testing.assert_allclose(got.J_comm, ref["J_comm"], rtol=1e-5)
+        np.testing.assert_allclose(got.J_comp, ref["J_comp"], rtol=1e-5)
+        assert got.iters == ref["iters"]
+        np.testing.assert_allclose(got.history, ref["history"], rtol=1e-5)
+
+    @pytest.mark.parametrize("name", list(SCENARIOS))
+    def test_colocated_matches_python_loop(self, name):
+        p = SCENARIOS[name]()
+        ref = _reference_alt(p, colocate=True, **KW)
+        got = solve_colocated(p, **KW)
+        np.testing.assert_allclose(got.J, ref["J"], rtol=1e-5)
+        assert got.iters == ref["iters"]
+        np.testing.assert_allclose(got.history, ref["history"], rtol=1e-5)
+
+    def test_single_is_engine_at_b1(self):
+        """stack_single -> engine_solve == engine_solve_single, bitwise."""
+        p = iot()
+        kw = dict(colocate=False, track_best=True, **KW)
+        batched = engine_solve(stack_single(p), **kw)
+        single = engine_solve_single(p, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(batched["J"][0]), np.asarray(single["J"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(batched["history"][0]), np.asarray(single["history"])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Early exit: the while_loop stops before m_max once everything stalled
+# ---------------------------------------------------------------------------
+class TestEarlyExit:
+    def test_sequential_early_exit(self):
+        p = iot()
+        out = engine_solve_single(
+            p, m_max=30, t_phi=5, alpha=0.5, tol=1e-3, patience=3,
+        )
+        rounds = int(out["rounds"])
+        assert rounds < 30
+        assert rounds == int(out["iters"])
+        # history past the exit point stays NaN (preallocated buffer)
+        hist = np.asarray(out["history"])
+        assert np.all(np.isnan(hist[rounds + 1 :]))
+        assert not np.any(np.isnan(hist[: rounds + 1]))
+
+    def test_batched_early_exit_tracks_slowest_instance(self):
+        from repro.core import random_connected
+
+        fleet = [iot(), random_connected(14, 6, seed=11)]
+        stacked, _ = stack_problems(fleet)
+        out = engine_solve(
+            stacked, m_max=25, t_phi=5, alpha=0.5, tol=1e-3, patience=3,
+        )
+        iters = np.asarray(out["iters"])
+        assert int(out["rounds"]) == int(iters.max()) < 25
+
+    def test_converged_b12_fleet_exits_before_m_max(self):
+        """Acceptance criterion: a converged B=12 fleet at the DEFAULT
+        tol/patience executes fewer outer rounds than m_max."""
+        fleet = sample_fleet(12, seed=7)
+        res = solve_fleet(fleet, m_max=30, t_phi=5)  # default tol/patience
+        assert res.n_instances == 12
+        assert res.rounds < 30, (
+            f"engine must exit early on a converged fleet (rounds={res.rounds})"
+        )
+        assert np.all(res.iters < 30)
+        assert res.rounds == int(res.iters.max())
+
+
+# ---------------------------------------------------------------------------
+# Freeze masking: frozen instances are bit-identical under extra trips
+# ---------------------------------------------------------------------------
+class TestFreezeMasking:
+    def test_frozen_instance_bits_survive_extra_rounds(self):
+        """Solve [fast, slow] vs [fast, fast]: same compiled program (same
+        shapes/statics), but the second run exits as soon as `fast` stalls
+        while the first keeps looping for `slow`. Lane 0 must come out
+        bit-identical — the extra trips only ever touch live lanes."""
+        from repro.core import random_connected
+
+        fast = random_connected(12, 5, seed=3, load_scale=0.4)
+        slow = random_connected(12, 5, seed=4, load_scale=1.1)
+        kw = dict(m_max=20, t_phi=5, alpha=0.5, tol=1e-3, patience=2)
+
+        mixed = engine_solve(stack_problems([fast, slow])[0], **kw)
+        alone = engine_solve(stack_problems([fast, fast])[0], **kw)
+        # The premise: lane 0 froze while lane 1 kept the loop alive.
+        assert int(mixed["iters"][0]) < int(mixed["rounds"])
+        assert int(mixed["rounds"]) > int(alone["rounds"])
+
+        for key in ("J", "J_comm", "J_comp", "iters"):
+            np.testing.assert_array_equal(
+                np.asarray(mixed[key][0]), np.asarray(alone[key][0])
+            )
+        np.testing.assert_array_equal(
+            np.asarray(mixed["hosts"][0]), np.asarray(alone["hosts"][0])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(mixed["history"][0]), np.asarray(alone["history"][0])
+        )
+        frozen_state = jax.tree_util.tree_map(lambda x: x[0], mixed["state"])
+        alone_state = jax.tree_util.tree_map(lambda x: x[0], alone["state"])
+        np.testing.assert_array_equal(
+            np.asarray(frozen_state.phi), np.asarray(alone_state.phi)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(frozen_state.x), np.asarray(alone_state.x)
+        )
