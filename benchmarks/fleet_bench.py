@@ -23,12 +23,23 @@ LU cost dominates the control plane (ISSUE 2 / DESIGN.md section 10).
 Section 4 (parity): Neumann-vs-LU objective agreement across all four
 methods on the paper's four topologies.
 
+Section 5 (--shard axis): the engine over a real instance-axis mesh. Runs
+whenever >= 2 devices are visible (CI simulates 8 CPU devices via
+XLA_FLAGS=--xla_force_host_platform_device_count=8); measures warm
+sharded-vs-unsharded throughput on a non-divisible batch (exercising the
+pad-and-trim path) and enforces rtol 1e-5 parity plus the
+`ShardPlan.output_sharded` guarantee. The throughput ratio is recorded for
+trend visibility but not asserted: simulated host devices oversubscribe the
+same cores, so the ratio only means something on real multi-chip hardware.
+
 Checks enforced:
   * per-instance J equivalence between batched and sequential (rtol 1e-3)
   * >= 2x cold end-to-end batched speedup at batch >= 6 on CPU
   * converged-fleet while_loop early exit (rounds executed < m_max)
   * >= 2x warm per-outer-round Neumann speedup over LU at V >= 64 on CPU
   * Neumann == LU objectives to rtol 1e-3 for all methods x topologies
+  * sharded == unsharded objectives to rtol 1e-5 with sharded outputs
+    (when >= 2 devices are visible)
 
 The warm batched-vs-sequential throughput ratio (the tracked ~0.65x gap) is
 persisted as `warm_batched_vs_sequential_ratio` in BENCH_fleet.json.
@@ -216,11 +227,60 @@ def _bench_solver_parity(print_fn) -> dict:
     return out
 
 
+def _bench_shard_axis(print_fn) -> dict:
+    """The engine over a real instance-axis mesh: parity + layout guarantees
+    on a non-divisible batch, warm throughput recorded for trend context."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        print_fn(
+            "fleet,shard skipped: 1 device visible (set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+        )
+        return {"n_devices": 1, "skipped": True}
+    batch = BATCH if BATCH % n_dev else BATCH + 1  # force pad-and-trim
+    fleet = sample_fleet(batch, seed=2027)
+    kw = dict(**SOLVE_KW)
+
+    res_u = solve_fleet(fleet, **kw)  # compile + warm, unsharded
+    res_s = solve_fleet(fleet, shard=True, **kw)
+    t0 = time.time()
+    res_u = solve_fleet(fleet, **kw)
+    t_warm_u = time.time() - t0
+    t0 = time.time()
+    res_s = solve_fleet(fleet, shard=True, **kw)
+    t_warm_s = time.time() - t0
+
+    np.testing.assert_allclose(res_s.J, res_u.J, rtol=1e-5)
+    assert res_s.shard.sharded and res_s.shard.output_sharded, res_s.shard
+    assert res_s.shard.padded_batch % n_dev == 0
+    assert res_s.n_instances == batch
+
+    ratio = t_warm_u / t_warm_s
+    out = {
+        "n_devices": n_dev,
+        "batch": batch,
+        "padded_batch": res_s.shard.padded_batch,
+        "warm_unsharded_s": round(t_warm_u, 3),
+        "warm_sharded_s": round(t_warm_s, 3),
+        # NOT trend-linted (key avoids 'ratio'/'speedup'): on a simulated
+        # host-device mesh all shards share the same cores, so this is a
+        # sanity readout, not a performance claim.
+        "warm_sharded_vs_unsharded_x": round(ratio, 3),
+    }
+    print_fn(
+        f"fleet,shard n_dev={n_dev} B={batch}->"
+        f"{res_s.shard.padded_batch} warm: unsharded={t_warm_u:.2f}s "
+        f"sharded={t_warm_s:.2f}s ({ratio:.2f}x)  parity rtol 1e-5 OK"
+    )
+    return out
+
+
 def run(print_fn=print, solver: str = "neumann") -> dict:
     out = {"engine": _bench_batched_vs_sequential(print_fn, solver)}
     out["early_exit"] = _bench_early_exit(print_fn)
     out["solver_axis"] = _bench_solver_axis(print_fn)
     out["solver_parity"] = _bench_solver_parity(print_fn)
+    out["shard_axis"] = _bench_shard_axis(print_fn)
     return out
 
 
@@ -233,7 +293,15 @@ def main() -> int:
         help="fixed-point solver for the batched-vs-sequential section "
         "(the solver-axis section always measures both)",
     )
+    ap.add_argument(
+        "--shard",
+        action="store_true",
+        help="run ONLY the shard-axis section (multi-device smoke)",
+    )
     args = ap.parse_args()
+    if args.shard:
+        _bench_shard_axis(print)
+        return 0
     run(solver=args.solver)
     return 0
 

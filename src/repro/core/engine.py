@@ -24,9 +24,13 @@ Batch semantics (DESIGN.md section 11):
   * frozen instances (stalled for `patience` rounds) are masked out of every
     carry update, so extra trips driven by still-live instances leave their
     results bit-identical;
-  * the early exit is batch-wide (`jnp.any(active)`), matching the
-    sequential per-instance `break` exactly at B=1 and costing live
-    instances nothing at B>1.
+  * the early exit is batch-wide, matching the sequential per-instance
+    `break` exactly at B=1 and costing live instances nothing at B>1. It is
+    also *shard-safe*: the `[B]` active mask is reduced to ONE replicated
+    `any_active` scalar inside the round body (where the partitioner emits a
+    single all-reduce when the instance axis is laid out over a fleet mesh),
+    and the while_loop predicate only ever reads that scalar — no per-trip
+    host sync, no collective inside the cond.
 """
 from __future__ import annotations
 
@@ -73,6 +77,10 @@ class EngineCarry:
     stall      : [B] int32 rounds since the last tol-sized improvement
     iters      : [B] int32 rounds actually applied per instance
     active     : [B] bool; False once an instance froze (stall >= patience)
+    any_active : scalar bool, `jnp.any(active)` reduced once per trip in the
+                 body; the while_loop predicate reads only this replicated
+                 scalar, keeping the early exit shard-safe when `active` is
+                 laid out over a fleet mesh axis
     m          : scalar int32 trip counter (= rounds the while_loop ran)
     history    : [B, m_max + 1] objective trace; NaN past each freeze point
     """
@@ -85,6 +93,7 @@ class EngineCarry:
     stall: jax.Array
     iters: jax.Array
     active: jax.Array
+    any_active: jax.Array
     m: jax.Array
     history: jax.Array
 
@@ -93,7 +102,7 @@ jax.tree_util.register_dataclass(
     EngineCarry,
     data_fields=[
         "state", "aux", "best_state", "best_obj", "best_J", "stall",
-        "iters", "active", "m", "history",
+        "iters", "active", "any_active", "m", "history",
     ],
     meta_fields=[],
 )
@@ -139,6 +148,7 @@ def round_step(
     # Freeze masking: instances that already stalled keep every slot.
     active = carry.active
     history = carry.history.at[:, carry.m + 1].set(jnp.where(active, J, jnp.nan))
+    active_nxt = active & (stall_nxt < patience)
     return EngineCarry(
         state=_bwhere(active, nxt, carry.state),
         aux=_bwhere(active, aux_nxt, carry.aux),
@@ -147,7 +157,10 @@ def round_step(
         best_J=jnp.where(active, best_J_nxt, carry.best_J),
         stall=jnp.where(active, stall_nxt, carry.stall),
         iters=carry.iters + active.astype(jnp.int32),
-        active=active & (stall_nxt < patience),
+        active=active_nxt,
+        # The only cross-instance reduction in the loop: one scalar per trip,
+        # computed in the body so the predicate stays collective-free.
+        any_active=jnp.any(active_nxt),
         m=carry.m + 1,
         history=history,
     )
@@ -204,6 +217,7 @@ def engine_solve(
         stall=jnp.zeros(batch, jnp.int32),
         iters=jnp.zeros(batch, jnp.int32),
         active=jnp.ones(batch, bool),
+        any_active=jnp.bool_(True),
         m=jnp.int32(0),
         history=history0.at[:, 0].set(J0),
     )
@@ -219,7 +233,7 @@ def engine_solve(
         solver=solver,
     )
     carry = jax.lax.while_loop(
-        lambda c: (c.m < m_max) & jnp.any(c.active), step, carry
+        lambda c: (c.m < m_max) & c.any_active, step, carry
     )
     if track_best:
         out_state, out_obj = carry.best_state, carry.best_obj

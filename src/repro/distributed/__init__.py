@@ -1,7 +1,12 @@
 from .sharding import (  # noqa: F401
+    FLEET_AXIS,
     ShardingRules,
     batch_pspec,
     cache_pspecs,
+    carries_fleet_sharding,
+    fleet_pspec,
+    fleet_sharding,
     param_pspecs,
+    shard_fleet,
     to_named_shardings,
 )

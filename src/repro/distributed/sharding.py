@@ -1,5 +1,18 @@
 """Sharding rules: map param/activation/cache tree paths -> PartitionSpecs.
 
+Two layout families live here:
+
+1. the serving-substrate rules below (params / activations / decode caches
+   over a ("data", "model"[, "pod"]) mesh), and
+2. the fleet control plane's instance-axis layout (`FLEET_AXIS`,
+   `fleet_sharding`, `shard_fleet`): a stacked `[B, ...]` problem ensemble
+   laid out over a 1-D mesh of local devices. Batch parallelism over
+   instances has no cross-instance communication, so the only collective the
+   partitioner ever emits is the engine's one per-trip `any_active`
+   reduction (core/engine.py). `fleet/solve.py` commits inputs with
+   `shard_fleet` and verifies outputs with `carries_fleet_sharding`, so a
+   layout fallback can never be silent.
+
 Baseline layout (the paper-faithful starting point for the roofline pass;
 the §Perf hillclimb iterates on these):
 
@@ -25,6 +38,61 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Fleet control plane: instance-axis layout over a 1-D device mesh
+# ---------------------------------------------------------------------------
+
+# The one mesh-axis name the fleet path uses everywhere: launch/mesh.py builds
+# the mesh over it, fleet/solve.py commits inputs to it, and the sharded test
+# suite asserts outputs still carry it.
+FLEET_AXIS = "fleet"
+
+
+def fleet_pspec() -> P:
+    """Leading instance axis over the fleet mesh, everything else replicated."""
+    return P(FLEET_AXIS)
+
+
+def fleet_sharding(mesh: Mesh) -> NamedSharding:
+    """The committed layout of every `[B, ...]` leaf of a stacked fleet."""
+    if FLEET_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no {FLEET_AXIS!r} axis; build it "
+            "with repro.launch.mesh.make_fleet_mesh"
+        )
+    return NamedSharding(mesh, fleet_pspec())
+
+
+def shard_fleet(tree, mesh: Mesh):
+    """Commit every array leaf of a stacked fleet pytree to the fleet layout.
+
+    All data leaves of a stacked `Problem` / `PadInfo` are `[B, ...]` with B
+    divisible by the mesh size (fleet/solve.py pads with inert repeats first),
+    so one NamedSharding covers the whole tree: dim 0 over `FLEET_AXIS`,
+    higher dims replicated."""
+    sharding = fleet_sharding(mesh)
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree
+    )
+
+
+def carries_fleet_sharding(x) -> bool:
+    """True iff `x` is actually laid out over a multi-device fleet axis.
+
+    This is the output-side check for the "no silent fallback" contract: a
+    replicated array, a single-device array, or a NamedSharding whose dim 0
+    does not name `FLEET_AXIS` all return False."""
+    sharding = getattr(x, "sharding", None)
+    if not isinstance(sharding, NamedSharding):
+        return False
+    if dict(sharding.mesh.shape).get(FLEET_AXIS, 1) < 2:
+        return False
+    spec = sharding.spec
+    if len(spec) == 0:
+        return False
+    dim0 = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+    return FLEET_AXIS in dim0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,7 @@ from .pad import (  # noqa: F401
     PadInfo,
     fleet_envelope,
     pad_apps,
+    pad_batch_to_multiple,
     pad_network,
     pad_problem,
     stack_problems,
@@ -19,6 +20,8 @@ from .pad import (  # noqa: F401
 from .solve import (  # noqa: F401
     METHODS,
     FleetResult,
+    ShardPlan,
+    envelope_cap_chunk,
     solve_fleet,
     solve_sequential,
 )

@@ -147,6 +147,27 @@ def unify_hop_bound(problems) -> int:
     )
 
 
+def pad_batch_to_multiple(problems, multiple: int) -> tuple[list, int]:
+    """Extend a batch with inert repeats of its first instance up to the next
+    multiple of `multiple`; returns (extended_problems, n_real).
+
+    Repeats are trivially inert: every engine lane runs the identical
+    per-instance computation (freeze masking keeps lanes independent —
+    DESIGN.md section 11), so a repeated instance converges exactly like its
+    original and the result gather simply trims everything past `n_real`.
+    This is the pad-and-trim contract `solve_fleet` applies to chunk tails
+    and (when sharding) to batches that don't divide the device count,
+    packaged for callers that stack batches themselves before handing them
+    to the engine (e.g. tests driving `engine_solve` on a committed mesh)."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    n = len(problems)
+    if n == 0:
+        raise ValueError("empty fleet")
+    target = -(-n // multiple) * multiple
+    return list(problems) + [problems[0]] * (target - n), n
+
+
 def stack_problems(
     problems, round_to: int = 1, envelope: tuple[int, int] | None = None,
     hop_bound: int | None = None,

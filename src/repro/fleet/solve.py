@@ -18,17 +18,29 @@ instance below m_max") exits the whole batch early once every instance has
 stalled, instead of burning all `m_max` rounds like the old fixed-length
 scan (`FleetResult.rounds` records the trips actually executed).
 
-Scaling hooks: `shard=True` splits the instance axis over local devices;
-`chunk_size=B` splits very large ensembles into fixed-B chunks that all pad
-to the *global* (V, A) envelope and unified hop bound, so arbitrary fleet
-sizes reuse ONE compiled program per (V, A, B) signature instead of
-compiling one giant batch (DESIGN.md sections 9-11). Each chunk early-exits
-independently.
+Scaling hooks (DESIGN.md sections 9-12):
+
+  * `shard=True` runs the engine over a real instance-axis mesh: the stacked
+    batch is committed to `NamedSharding(mesh, P("fleet"))`, padded up to a
+    device multiple with inert repeats when it doesn't divide (trimmed on
+    gather), and the engine outputs are verified to still carry the fleet
+    layout. Every layout decision is explicit: `FleetResult.shard` records
+    what happened (`ShardPlan`), and a fallback (single device) is logged —
+    never silent. `devices=` caps the mesh to the first N local devices.
+  * `chunk_size=B` splits very large ensembles into fixed-B chunks that all
+    pad to the *global* (V, A) envelope and unified hop bound, so arbitrary
+    fleet sizes reuse ONE compiled program per (V, A, B) signature instead
+    of compiling one giant batch. Each chunk early-exits independently.
+  * `envelope_cap_gb=G` bounds the per-device footprint of the engine's
+    phi-shaped `[B, A, K, V, V]` buffers by auto-capping the chunk size for
+    the (V, A) tier at hand — `chunk_size` alone caps B globally but not
+    the per-device envelope, which is what blows up first at V >= 512.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +50,55 @@ from ..core.alt import ALL_METHODS, linearize, method_kwargs
 from ..core.engine import engine_solve
 from ..core.flow import objective
 from ..core.placement import structured_init
-from ..core.structs import Problem
-from .pad import PadInfo, fleet_envelope, stack_problems, unify_hop_bound
+from ..core.structs import K_STAGES, Problem
+from ..distributed.sharding import carries_fleet_sharding, shard_fleet
+from .pad import fleet_envelope, stack_problems, unify_hop_bound
 
 METHODS = ("ALT", "OneShot", "CongUnaware", "CoLocated")
+
+logger = logging.getLogger("repro.fleet")
+
+# Static accounting for the envelope cap: how many phi-shaped [A, K, V, V]
+# float32 buffers one engine lane keeps alive at the round-body peak —
+# carry.state + carry.best_state + the round-local next iterate, the
+# placement sweep's delta tensor, and headroom for the forwarding sweeps'
+# XLA temporaries. Deliberately conservative: the cap is a guard rail, not
+# an allocator.
+_PHI_COPIES = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Explicit record of one solve's instance-axis layout decision.
+
+    The pre-PR-4 `shard=True` was a `device_put` hint that silently no-oped
+    whenever the batch didn't divide the device count or only one device was
+    visible. Layout is now always an explicit decision: `reason` says what
+    was chosen and why, `solve_fleet` logs any fallback, and the plan rides
+    on `FleetResult.shard` so callers (CLI, benchmarks, tests) can assert on
+    it instead of guessing from timings.
+
+    requested      : the caller passed shard=True
+    n_devices      : devices in the fleet mesh actually used (1 = unsharded)
+    batch          : real instances handed to solve_fleet
+    padded_batch   : engine lanes actually run, summed over chunks (>= batch;
+                     the excess is inert repeats, trimmed on gather)
+    reason         : "sharded" | "single-device" | "not-requested"
+    output_sharded : every chunk's engine outputs were verified to carry the
+                     fleet NamedSharding (False whenever n_devices == 1, or
+                     on the fallback a silent layout change used to hide)
+    """
+
+    requested: bool
+    n_devices: int = 1
+    batch: int = 0
+    padded_batch: int = 0
+    reason: str = "not-requested"
+    output_sharded: bool = False
+
+    @property
+    def sharded(self) -> bool:
+        return self.n_devices > 1
 
 
 @dataclasses.dataclass
@@ -57,6 +114,7 @@ class FleetResult:
     hosts               : [B, A, 2] chosen partition hosts (padded apps hold
                           meaningless-but-harmless indices)
     node_mask/app_mask  : [B, V] / [B, A] validity masks from padding
+    shard               : the instance-axis layout decision (`ShardPlan`)
     """
 
     method: str
@@ -69,6 +127,9 @@ class FleetResult:
     hosts: np.ndarray
     node_mask: np.ndarray
     app_mask: np.ndarray
+    shard: ShardPlan = dataclasses.field(
+        default_factory=lambda: ShardPlan(requested=False)
+    )
 
     @property
     def n_instances(self) -> int:
@@ -100,11 +161,14 @@ class FleetResult:
         return out
 
     def summary(self) -> str:
+        layout = (
+            f"  shard={self.shard.n_devices}dev" if self.shard.sharded else ""
+        )
         return (
             f"fleet[{self.method}] B={self.n_instances} "
             f"J: min={self.J.min():.3f} med={np.median(self.J):.3f} "
             f"max={self.J.max():.3f}  iters: {self.iters.min()}-{self.iters.max()}"
-            f"  rounds={self.rounds}"
+            f"  rounds={self.rounds}{layout}"
         )
 
 
@@ -171,33 +235,80 @@ def _solve_fleet_stacked(
     return out
 
 
-def _shard_over_devices(stacked: Problem, info: PadInfo, batch: int):
-    """Optional hook: lay the instance axis out over all local devices.
+def _plan_mesh(shard: bool, devices: int | None):
+    """Decide the instance-axis layout up front — explicit and logged.
 
-    No-op unless there are >= 2 devices and the batch divides evenly; the
-    jitted fleet solve then runs SPMD over the instance axis with no code
-    changes (batch parallelism has no cross-instance communication).
-    """
-    devices = jax.devices()
-    n_dev = len(devices)
-    if n_dev < 2 or batch % n_dev != 0:
-        return stacked, info
-    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    Returns (mesh_or_None, n_devices, reason). The old `_shard_over_devices`
+    hint silently kept the single-device layout whenever the batch didn't
+    divide the device count; now a non-divisible batch is padded (see
+    `_run_chunk`) and the only remaining fallback — a single visible device
+    — is surfaced in the plan and the log."""
+    if not shard:
+        if devices is not None:
+            raise ValueError("devices= only applies with shard=True")
+        return None, 1, "not-requested"
+    from ..launch.mesh import make_fleet_mesh
 
-    mesh = Mesh(np.asarray(devices), ("fleet",))
-    sharding = NamedSharding(mesh, PartitionSpec("fleet"))
-    put = lambda x: jax.device_put(x, sharding)
-    return jax.tree_util.tree_map(put, (stacked, info))
+    mesh = make_fleet_mesh(devices)
+    n_dev = int(mesh.devices.size)
+    if n_dev < 2:
+        logger.warning(
+            "solve_fleet(shard=True): only one device in the mesh; "
+            "running unsharded (reason=single-device)"
+        )
+        return None, 1, "single-device"
+    return mesh, n_dev, "sharded"
 
 
-def _run_chunk(problems, *, envelope, hop_bound, round_to, shard, solve_kw):
+def _run_chunk(problems, *, envelope, hop_bound, round_to, mesh, batch_to, solve_kw):
+    """Stack (and, when sharding, pad + commit) one chunk and solve it.
+
+    batch_to : pad the lane count up to this target with inert repeats (the
+        chunked path passes `chunk_size` so every chunk compiles to the same
+        program); a fleet mesh additionally rounds the target up to a device
+        multiple. Returns (engine_out, stacked_info, n_real, n_lanes,
+        outputs_sharded)."""
+    real = len(problems)
+    target = max(real, batch_to or 0)
+    if mesh is not None:
+        n_dev = int(mesh.devices.size)
+        target = -(-target // n_dev) * n_dev
+    if target > real:
+        problems = list(problems) + [problems[0]] * (target - real)
     stacked, info = stack_problems(
         problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound
     )
-    if shard:
-        stacked, info = _shard_over_devices(stacked, info, len(problems))
+    if mesh is not None:
+        stacked, info = shard_fleet((stacked, info), mesh)
     out = _solve_fleet_stacked(stacked, **solve_kw)
-    return out, info
+    sharded_out = mesh is not None and carries_fleet_sharding(out["J"])
+    if mesh is not None and not sharded_out:
+        # The whole point of PR 4: a layout change must never be silent.
+        logger.warning(
+            "solve_fleet: engine outputs lost the fleet sharding "
+            "(B=%d over %d devices) — recording output_sharded=False",
+            target, int(mesh.devices.size),
+        )
+    return out, info, real, target, sharded_out
+
+
+def envelope_cap_chunk(
+    problems, *, round_to: int, n_devices: int, cap_gb: float
+) -> int:
+    """Largest chunk size keeping one device's phi-shaped buffers under
+    `cap_gb` for this fleet's (V, A) tier.
+
+    The engine's dominant footprint is the `[B_dev, A, K, V, V]` family
+    (state/best/next phi plus the placement sweep's delta — `_PHI_COPIES`
+    float32 copies per lane at the round-body peak). `chunk_size` caps B
+    globally; this caps the *per-device envelope*, which is what actually
+    blows up at V >= 512 (ROADMAP item)."""
+    if cap_gb <= 0:
+        raise ValueError(f"envelope_cap_gb must be positive, got {cap_gb}")
+    v, a = fleet_envelope(problems, round_to=round_to)
+    per_lane_bytes = _PHI_COPIES * a * K_STAGES * v * v * 4
+    lanes_per_device = max(1, int(cap_gb * 2**30 // per_lane_bytes))
+    return lanes_per_device * max(1, n_devices)
 
 
 def solve_fleet(
@@ -211,9 +322,11 @@ def solve_fleet(
     patience: int = 4,
     round_to: int = 1,
     shard: bool = False,
+    devices: int | None = None,
     use_pallas: bool = False,
     solver: str = "neumann",
     chunk_size: int | None = None,
+    envelope_cap_gb: float | None = None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of problems as one batched computation.
 
@@ -222,13 +335,24 @@ def solve_fleet(
                  the sequential solvers in core/alt.py instance-for-instance
     round_to   : round the padded (V, A) envelope up to this multiple so a
                  long-running control plane compiles few distinct shapes
-    shard      : lay the instance axis out over local devices when possible
+    shard      : run the engine with the instance axis committed over a 1-D
+                 fleet mesh of local devices; non-divisible batches are
+                 padded up to a device multiple with inert repeats (trimmed
+                 on gather). The decision taken is surfaced as
+                 `FleetResult.shard` and logged — never silent.
+    devices    : cap the fleet mesh to the first N local devices
+                 (requires shard=True; asking for more than exist raises)
     solver     : "neumann" (hop-capped propagation, default) | "lu" (dense)
     chunk_size : split ensembles larger than this into fixed-B chunks that
                  share one global (V, A) envelope + hop bound, reusing a
                  single compiled program per (V, A, B) signature; the tail
                  chunk is padded with repeats of its first instance (results
-                 trimmed). None = one batch.
+                 trimmed). None = one batch. When sharding, the chunk size
+                 is rounded up to a device multiple so every chunk keeps the
+                 committed layout.
+    envelope_cap_gb : bound the per-device footprint of the phi-shaped
+                 [B, A, K, V, V] engine buffers by auto-capping the chunk
+                 size for this fleet's (V, A) tier (see `envelope_cap_chunk`)
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
@@ -237,33 +361,58 @@ def solve_fleet(
         patience=patience, use_pallas=use_pallas, solver=solver,
     )
     n = len(problems)
-    if chunk_size is None or n <= chunk_size:
-        out, info = _run_chunk(
-            problems, envelope=None, hop_bound=None, round_to=round_to,
-            shard=shard, solve_kw=solve_kw,
+    mesh, n_dev, reason = _plan_mesh(shard, devices)
+
+    if envelope_cap_gb is not None:
+        cap = envelope_cap_chunk(
+            problems, round_to=round_to, n_devices=n_dev,
+            cap_gb=envelope_cap_gb,
         )
-        outs, infos, keep = [out], [info], [n]
+        if chunk_size is None or cap < chunk_size:
+            if cap < n:
+                logger.info(
+                    "solve_fleet: envelope cap %.3g GB/device limits this "
+                    "(V, A) tier to chunks of B=%d (was %s)",
+                    envelope_cap_gb, cap, chunk_size,
+                )
+            chunk_size = cap
+    if mesh is not None and chunk_size is not None and chunk_size % n_dev:
+        # Round the chunk itself so every chunk (not just the tail) runs at
+        # a device multiple and reuses one compiled, committed program.
+        chunk_size = -(-chunk_size // n_dev) * n_dev
+
+    chunk_kw = dict(round_to=round_to, mesh=mesh, solve_kw=solve_kw)
+    if chunk_size is None or n <= chunk_size:
+        outs = [
+            _run_chunk(problems, envelope=None, hop_bound=None,
+                       batch_to=None, **chunk_kw)
+        ]
     else:
         # One global envelope + hop bound so every chunk hits the same
         # compiled program.
         envelope = fleet_envelope(problems, round_to=round_to)
         hop_bound = unify_hop_bound(problems)
-        outs, infos, keep = [], [], []
-        for i in range(0, n, chunk_size):
-            chunk = list(problems[i : i + chunk_size])
-            real = len(chunk)
-            chunk += [chunk[0]] * (chunk_size - real)  # inert tail repeats
-            out, info = _run_chunk(
-                chunk, envelope=envelope, hop_bound=hop_bound,
-                round_to=round_to, shard=shard, solve_kw=solve_kw,
+        outs = [
+            _run_chunk(
+                list(problems[i : i + chunk_size]), envelope=envelope,
+                hop_bound=hop_bound, batch_to=chunk_size, **chunk_kw,
             )
-            outs.append(out)
-            infos.append(info)
-            keep.append(real)
+            for i in range(0, n, chunk_size)
+        ]
+
+    plan = ShardPlan(
+        requested=shard,
+        n_devices=n_dev,
+        batch=n,
+        padded_batch=sum(lanes for (_, _, _, lanes, _) in outs),
+        reason=reason,
+        output_sharded=mesh is not None
+        and all(ok for (_, _, _, _, ok) in outs),
+    )
 
     def gather(getter):
         return np.concatenate(
-            [np.asarray(getter(o, i))[:k] for (o, i, k) in zip(outs, infos, keep)]
+            [np.asarray(getter(o, i))[:k] for (o, i, k, _, _) in outs]
         )
 
     return FleetResult(
@@ -273,10 +422,11 @@ def solve_fleet(
         J_comp=gather(lambda o, i: o["J_comp"]),
         history=gather(lambda o, i: o["history"]),
         iters=gather(lambda o, i: o["iters"]),
-        rounds=max(int(o["rounds"]) for o in outs),
+        rounds=max(int(o["rounds"]) for (o, _, _, _, _) in outs),
         hosts=gather(lambda o, i: o["hosts"]),
         node_mask=gather(lambda o, i: i.node_mask),
         app_mask=gather(lambda o, i: i.app_mask),
+        shard=plan,
     )
 
 

@@ -9,10 +9,13 @@ Examples (CPU):
   PYTHONPATH=src python -m repro.launch.fleet --families erdos_renyi,iot_hierarchy \
       --instances 16 --seed 7 --m-max 8
   PYTHONPATH=src python -m repro.launch.fleet --scenario iot --load-grid 0.4,0.8,1.2
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.fleet --instances 10 --shard
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -46,7 +49,27 @@ def main(argv=None) -> int:
     ap.add_argument("--m-max", type=int, default=30)
     ap.add_argument("--t-phi", type=int, default=10)
     ap.add_argument("--round-to", type=int, default=8)
-    ap.add_argument("--shard", action="store_true")
+    ap.add_argument(
+        "--shard",
+        action="store_true",
+        help="run the engine with the instance axis committed over a 1-D "
+        "fleet mesh of local devices (non-divisible batches are padded with "
+        "inert repeats and trimmed)",
+    )
+    ap.add_argument(
+        "--devices",
+        type=int,
+        default=None,
+        help="cap the fleet mesh to the first N local devices "
+        "(requires --shard)",
+    )
+    ap.add_argument(
+        "--envelope-cap-gb",
+        type=float,
+        default=None,
+        help="bound the per-device footprint of the [B, A, K, V, V] engine "
+        "buffers by auto-capping the chunk size for this (V, A) tier",
+    )
     ap.add_argument(
         "--solver",
         choices=("neumann", "lu"),
@@ -82,8 +105,10 @@ def main(argv=None) -> int:
         t_phi=args.t_phi,
         round_to=args.round_to,
         shard=args.shard,
+        devices=args.devices,
         solver=args.solver,
         chunk_size=args.chunk_size,
+        envelope_cap_gb=args.envelope_cap_gb,
     )
     dt = time.time() - t0
     print(
@@ -98,6 +123,9 @@ def main(argv=None) -> int:
                 # batch converged and the engine exited early
                 "rounds": res.rounds,
                 "m_max": args.m_max,
+                # the instance-axis layout decision: sharded or not, why, and
+                # how many inert pad lanes were run and trimmed
+                "shard": dataclasses.asdict(res.shard),
                 "summary": res.summary(),
                 "per_instance": res.per_instance(),
             },

@@ -6,10 +6,36 @@ jax device state (the dry-run must set XLA_FLAGS before first jax init).
 Production target: TPU v5e pods, 16x16 = 256 chips per pod.
   single pod:  (data=16, model=16)           — ICI everywhere
   multi-pod:   (pod=2, data=16, model=16)    — "pod" is the DCN-class axis
+
+The fleet control plane uses a different, 1-D mesh (`make_fleet_mesh`): one
+"fleet" axis over the local devices, sharding the instance axis of a stacked
+scenario ensemble (fleet/solve.py). CI exercises it on a simulated mesh via
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D instance-axis mesh for the fleet control plane.
+
+    n_devices : use only the first `n_devices` local devices (None = all).
+        Asking for more devices than exist is a configuration error and
+        raises — the old behaviour of silently running on whatever was
+        available is exactly the fallback PR 4 removed.
+    """
+    from ..distributed.sharding import FLEET_AXIS
+
+    devices = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"requested {n_devices} devices, have {len(devices)}"
+            )
+        devices = devices[:n_devices]
+    return jax.sharding.Mesh(np.asarray(devices), (FLEET_AXIS,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

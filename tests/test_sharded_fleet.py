@@ -1,0 +1,328 @@
+"""Sharded fleet execution: the round engine over a real instance-axis mesh.
+
+These tests are written against a simulated multi-device CPU mesh:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_sharded_fleet.py
+
+(the dedicated CI job runs exactly that). Tests that need >= 2 devices skip
+cleanly on a single-device run; the explicit-fallback tests run everywhere.
+
+What is pinned here:
+
+  * sharded vs unsharded `solve_fleet` parity at rtol 1e-5 for all four
+    methods on a mixed-size fleet, including a non-divisible batch (B=10 on
+    8 devices) that now pads-and-trims instead of silently no-oping;
+  * engine outputs actually carry the fleet `NamedSharding` — not a
+    replicated fallback (`carries_fleet_sharding` + `ShardPlan.output_sharded`);
+  * the DESIGN.md section 9 inertness contract extended across shard
+    boundaries: phantom pad instances and tail repeats are *bitwise*-inert
+    to the real instances' objective/hosts regardless of which device any
+    lane lands on (hypothesis property + deterministic anchors).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from tests._optional_deps import given, settings, st
+
+from repro.core import iot, mesh as mesh_scenario, random_connected
+from repro.core.engine import engine_solve
+from repro.distributed.sharding import (
+    FLEET_AXIS,
+    carries_fleet_sharding,
+    fleet_sharding,
+    shard_fleet,
+)
+from repro.fleet import (
+    METHODS,
+    ShardPlan,
+    envelope_cap_chunk,
+    pad_batch_to_multiple,
+    solve_fleet,
+    stack_problems,
+)
+from repro.launch.mesh import make_fleet_mesh
+
+N_DEV = len(jax.devices())
+needs_mesh = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 devices; run under "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+# Small budgets: every solve below compiles once per (V, A, B, kwargs)
+# signature and parity is structural, not about deep convergence.
+SOLVE_KW = dict(m_max=3, t_phi=3, alpha=0.5, tol=1e-3, patience=4)
+
+
+def _pool():
+    """Mixed-size instance pool. `mesh_scenario()` comes first so every
+    prefix of the pool shares one (V, A) envelope — the bitwise tests rely
+    on the envelope (and hence the compiled program) not changing when
+    later, smaller instances are swapped around."""
+    return [
+        mesh_scenario(),
+        iot(),
+        random_connected(12, 5, seed=3),
+        random_connected(20, 8, seed=4),
+        random_connected(16, 6, seed=5),
+        random_connected(14, 7, seed=6),
+        random_connected(18, 9, seed=7),
+        random_connected(11, 4, seed=8),
+    ]
+
+
+def _assert_parity(sharded, unsharded, rtol=1e-5):
+    np.testing.assert_allclose(sharded.J, unsharded.J, rtol=rtol)
+    np.testing.assert_allclose(sharded.J_comm, unsharded.J_comm, rtol=rtol)
+    np.testing.assert_allclose(sharded.J_comp, unsharded.J_comp, rtol=rtol)
+    np.testing.assert_array_equal(sharded.iters, unsharded.iters)
+    np.testing.assert_array_equal(sharded.hosts, unsharded.hosts)
+    np.testing.assert_allclose(sharded.history, unsharded.history, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# Sharded vs unsharded parity on the simulated mesh
+# ---------------------------------------------------------------------------
+@needs_mesh
+class TestShardedParity:
+    @pytest.mark.parametrize("method", METHODS)
+    def test_matches_unsharded_all_methods(self, method):
+        fleet = _pool()[:N_DEV] if N_DEV <= 8 else _pool()
+        res_s = solve_fleet(fleet, method=method, shard=True, **SOLVE_KW)
+        res_u = solve_fleet(fleet, method=method, shard=False, **SOLVE_KW)
+        _assert_parity(res_s, res_u)
+        assert res_s.shard.sharded
+        assert res_s.shard.reason == "sharded"
+        assert res_s.shard.n_devices == N_DEV
+
+    def test_non_divisible_batch_pads_and_trims(self):
+        """B=10 on 8 devices: the old hook silently fell back to one device;
+        now the batch is padded to the next device multiple with inert
+        repeats, solved sharded, and trimmed back to 10 results."""
+        pool = _pool()
+        fleet = pool + pool[:2]
+        assert len(fleet) % N_DEV != 0
+        res_s = solve_fleet(fleet, shard=True, **SOLVE_KW)
+        res_u = solve_fleet(fleet, shard=False, **SOLVE_KW)
+        _assert_parity(res_s, res_u)
+        assert res_s.n_instances == len(fleet)
+        expected = -(-len(fleet) // N_DEV) * N_DEV
+        assert res_s.shard.padded_batch == expected
+        assert res_s.shard.sharded and res_s.shard.output_sharded
+
+    def test_chunked_and_sharded_compose(self):
+        """chunk_size is rounded up to a device multiple so every chunk runs
+        the committed layout; results still match the unsharded path."""
+        pool = _pool()
+        fleet = pool + pool[:4]  # 12 instances
+        res_s = solve_fleet(
+            fleet, shard=True, chunk_size=N_DEV // 2 + 1, **SOLVE_KW
+        )
+        res_u = solve_fleet(fleet, shard=False, **SOLVE_KW)
+        _assert_parity(res_s, res_u)
+        assert res_s.shard.output_sharded
+        # every chunk padded to a device multiple
+        assert res_s.shard.padded_batch % N_DEV == 0
+
+    def test_colocated_mixed_fleet(self):
+        fleet = _pool()
+        res_s = solve_fleet(fleet, method="CoLocated", shard=True, **SOLVE_KW)
+        res_u = solve_fleet(fleet, method="CoLocated", shard=False, **SOLVE_KW)
+        _assert_parity(res_s, res_u)
+
+
+# ---------------------------------------------------------------------------
+# Outputs really are laid out over the fleet axis (no silent fallback)
+# ---------------------------------------------------------------------------
+@needs_mesh
+class TestOutputsCarryFleetSharding:
+    def test_engine_outputs_carry_named_sharding(self):
+        """Drive the engine directly with committed inputs and check the
+        device layout of what comes back — not a proxy flag."""
+        fleet, _ = pad_batch_to_multiple(_pool(), N_DEV)
+        stacked, info = stack_problems(fleet)
+        fmesh = make_fleet_mesh()
+        stacked, info = shard_fleet((stacked, info), fmesh)
+        assert stacked.net.adj.sharding == fleet_sharding(fmesh)
+        out = engine_solve(stacked, colocate=False, **SOLVE_KW)
+        for key in ("J", "J_comm", "J_comp", "hosts", "history", "iters"):
+            assert carries_fleet_sharding(out[key]), (
+                f"engine output {key!r} lost the fleet sharding: "
+                f"{getattr(out[key], 'sharding', None)}"
+            )
+        assert out["J"].sharding.spec == P(FLEET_AXIS)
+
+    def test_fleet_result_records_output_sharding(self):
+        res = solve_fleet(_pool(), shard=True, **SOLVE_KW)
+        assert res.shard.output_sharded
+        assert res.shard.n_devices == N_DEV
+
+    def test_carries_fleet_sharding_rejects_fallbacks(self):
+        fmesh = make_fleet_mesh()
+        x = jax.device_put(np.arange(float(2 * N_DEV)), fleet_sharding(fmesh))
+        assert carries_fleet_sharding(x)
+        assert not carries_fleet_sharding(np.arange(8.0))  # host array
+        assert not carries_fleet_sharding(jax.numpy.arange(8.0))  # 1 device
+        replicated = jax.device_put(
+            jax.numpy.arange(8.0),
+            jax.sharding.NamedSharding(fmesh, P()),
+        )
+        assert not carries_fleet_sharding(replicated)
+
+
+# ---------------------------------------------------------------------------
+# Explicit layout decisions (run on any device count)
+# ---------------------------------------------------------------------------
+class TestExplicitLayoutDecisions:
+    def test_unsharded_plan_is_explicit(self):
+        res = solve_fleet([iot(), random_connected(12, 5, seed=3)], **SOLVE_KW)
+        assert res.shard == ShardPlan(
+            requested=False, n_devices=1, batch=2, padded_batch=2,
+            reason="not-requested", output_sharded=False,
+        )
+
+    def test_single_device_fallback_is_logged(self, caplog):
+        """shard=True on a 1-device mesh must run, must say so in the plan,
+        and must warn — the silent-fallback bug this PR removes."""
+        fleet = [iot(), random_connected(12, 5, seed=3)]
+        with caplog.at_level("WARNING", logger="repro.fleet"):
+            res = solve_fleet(fleet, shard=True, devices=1, **SOLVE_KW)
+        assert res.shard.requested and not res.shard.sharded
+        assert res.shard.reason == "single-device"
+        assert not res.shard.output_sharded
+        assert any("single-device" in r.message for r in caplog.records)
+        ref = solve_fleet(fleet, **SOLVE_KW)
+        np.testing.assert_allclose(res.J, ref.J, rtol=1e-5)
+
+    def test_too_many_devices_raises(self):
+        with pytest.raises(ValueError, match="devices"):
+            solve_fleet([iot()], shard=True, devices=N_DEV + 1, **SOLVE_KW)
+
+    def test_devices_without_shard_raises(self):
+        with pytest.raises(ValueError, match="shard"):
+            solve_fleet([iot()], devices=1, **SOLVE_KW)
+
+    def test_shard_plan_serializes(self):
+        """The CLI emits the plan as JSON; keep it a plain-data dataclass."""
+        res = solve_fleet([iot()], **SOLVE_KW)
+        d = dataclasses.asdict(res.shard)
+        assert d["reason"] == "not-requested"
+        assert isinstance(d["padded_batch"], int)
+
+
+# ---------------------------------------------------------------------------
+# Per-tier envelope caps
+# ---------------------------------------------------------------------------
+class TestEnvelopeCap:
+    def test_cap_bounds_chunk_for_tier(self):
+        fleet = [random_connected(24, 10, seed=s) for s in range(6)]
+        # Tiny budget: forces chunking; generous budget: leaves one batch.
+        tiny = envelope_cap_chunk(fleet, round_to=1, n_devices=1, cap_gb=1e-4)
+        big = envelope_cap_chunk(fleet, round_to=1, n_devices=1, cap_gb=64.0)
+        assert 1 <= tiny < len(fleet) <= big
+        # More devices admit proportionally more lanes per chunk.
+        assert envelope_cap_chunk(
+            fleet, round_to=1, n_devices=4, cap_gb=1e-4
+        ) == 4 * tiny
+
+    def test_capped_solve_matches_uncapped(self):
+        fleet = [random_connected(14, 6, seed=s) for s in range(5)]
+        ref = solve_fleet(fleet, **SOLVE_KW)
+        capped = solve_fleet(fleet, envelope_cap_gb=1e-4, **SOLVE_KW)
+        np.testing.assert_allclose(capped.J, ref.J, rtol=1e-5)
+        np.testing.assert_array_equal(capped.hosts, ref.hosts)
+
+    def test_cap_rejects_nonpositive(self):
+        with pytest.raises(ValueError, match="positive"):
+            envelope_cap_chunk([iot()], round_to=1, n_devices=1, cap_gb=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Inertness across shard boundaries (DESIGN.md section 9, extended)
+# ---------------------------------------------------------------------------
+@needs_mesh
+class TestInertnessAcrossShards:
+    """Phantom pad instances and tail repeats must be *bitwise*-inert to the
+    real instances' objective and hosts regardless of which device any lane
+    lands on. Engine lanes are arithmetically independent (the only
+    cross-instance op is the `any_active` exit reduction, which can only
+    add freeze-masked — hence bit-identical — trips), so swapping what the
+    other lanes contain, or where a real instance sits in the batch, must
+    not change its result by a single bit."""
+
+    def _solve(self, fleet):
+        return solve_fleet(fleet, shard=True, **SOLVE_KW)
+
+    def test_rotation_moves_instances_across_devices_bitwise(self):
+        pool = _pool()
+        base = self._solve(pool)
+        for rot in (1, 3, 5):
+            rotated = pool[rot:] + pool[:rot]
+            res = self._solve(rotated)
+            np.testing.assert_array_equal(
+                np.concatenate([res.J[-rot:], res.J[:-rot]]), base.J
+            )
+            np.testing.assert_array_equal(
+                np.concatenate([res.hosts[-rot:], res.hosts[:-rot]]),
+                base.hosts,
+            )
+
+    def test_tail_repeats_bitwise_inert(self):
+        """Auto-padding repeats (B=6 -> 8) give the same bits as solving the
+        divisible fleet, and each repeat lane reproduces lane 0 exactly."""
+        pool = _pool()[:6]
+        res = self._solve(pool)  # pads 6 -> 8 internally
+        explicit = self._solve(pool + [pool[0], pool[0]])
+        np.testing.assert_array_equal(explicit.J[:6], res.J)
+        np.testing.assert_array_equal(explicit.hosts[:6], res.hosts)
+        np.testing.assert_array_equal(
+            explicit.J[6:], np.repeat(res.J[:1], 2)
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        # n_real <= 6 keeps fleet + phantom <= 8 lanes, so every draw pads
+        # to the SAME lane count and reuses one compiled program.
+        n_real=st.integers(min_value=1, max_value=6),
+        rot=st.integers(min_value=0, max_value=7),
+        phantom_seed=st.integers(min_value=0, max_value=3),
+    )
+    def test_property_phantoms_and_position_bitwise_inert(
+        self, n_real, rot, phantom_seed
+    ):
+        """For any real-prefix size, lane rotation, and appended phantom
+        instance: the real instances' J/hosts are bitwise unchanged.
+
+        The pool's first instance fixes the (V, A) envelope and the unified
+        hop bound, and every solve pads to the same lane count, so all draws
+        share ONE compiled program — any bit that changes would be a lane
+        leaking across a shard boundary."""
+        pool = _pool()
+        fleet = pool[:1] + pool[1 : 1 + n_real]  # envelope-dominant + n_real
+        base = self._solve(fleet)
+
+        # (a) phantom appended: a small instance that changes neither the
+        # envelope nor the unified hop bound.
+        phantom = random_connected(8, 3, seed=100 + phantom_seed)
+        with_phantom = self._solve(fleet + [phantom])
+        np.testing.assert_array_equal(with_phantom.J[: len(fleet)], base.J)
+        np.testing.assert_array_equal(
+            with_phantom.hosts[: len(fleet)], base.hosts
+        )
+
+        # (b) rotation: same instances on different lanes/devices.
+        r = rot % len(fleet)
+        if r:
+            rotated = self._solve(fleet[r:] + fleet[:r])
+            np.testing.assert_array_equal(
+                np.concatenate([rotated.J[-r:], rotated.J[:-r]]), base.J
+            )
+            np.testing.assert_array_equal(
+                np.concatenate([rotated.hosts[-r:], rotated.hosts[:-r]]),
+                base.hosts,
+            )
