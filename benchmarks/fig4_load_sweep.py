@@ -20,8 +20,10 @@ SCALES = (0.4, 0.6, 0.8, 1.0, 1.2)
 METHODS = ("ALT", "OneShot", "CongUnaware", "CoLocated")
 
 
-def run(print_fn=print) -> dict:
-    fleet = load_grid(iot, SCALES)
+def run(print_fn=print, n_parts: int | None = None) -> dict:
+    """`n_parts` sweeps the same load grid at a different split depth
+    (stage-generic core, DESIGN.md section 13); None = the paper's P = 2."""
+    fleet = load_grid(iot, SCALES, n_parts=n_parts)
     per_method = {
         m: solve_fleet(fleet, method=m, m_max=30, t_phi=10) for m in METHODS
     }
@@ -41,4 +43,9 @@ def run(print_fn=print) -> dict:
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="DNN split depth P (default: the paper's 2)")
+    print(json.dumps(run(n_parts=ap.parse_args().partitions), indent=1))

@@ -19,8 +19,10 @@ from repro.fleet import eta_grid, solve_fleet
 ETAS = (0.05, 0.2, 0.35, 0.5, 0.65, 0.8, 0.95)
 
 
-def run(print_fn=print) -> dict:
-    fleet = eta_grid(iot, ETAS)
+def run(print_fn=print, n_parts: int | None = None) -> dict:
+    """`n_parts` sweeps the same eta grid at a different split depth
+    (stage-generic core, DESIGN.md section 13); None = the paper's P = 2."""
+    fleet = eta_grid(iot, ETAS, n_parts=n_parts)
     res = solve_fleet(fleet, m_max=30, t_phi=10)
     print_fn(f"fig5,engine rounds executed: {res.rounds}/30")
     out = {}
@@ -45,4 +47,9 @@ def run(print_fn=print) -> dict:
 
 
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=1))
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="DNN split depth P (default: the paper's 2)")
+    print(json.dumps(run(n_parts=ap.parse_args().partitions), indent=1))

@@ -23,7 +23,13 @@ LU cost dominates the control plane (ISSUE 2 / DESIGN.md section 10).
 Section 4 (parity): Neumann-vs-LU objective agreement across all four
 methods on the paper's four topologies.
 
-Section 5 (--shard axis): the engine over a real instance-axis mesh. Runs
+Section 5 (partition axis): the stage-generic P sweep (DESIGN.md section
+13) — the same IoT-tree control-plane workload at split depths P = 1..4
+(each its own compiled K envelope), plus a mixed-P fleet padded with
+phantom stages and solved as ONE compiled batch, verified against the
+per-instance sequential path.
+
+Section 6 (--shard axis): the engine over a real instance-axis mesh. Runs
 whenever >= 2 devices are visible (CI simulates 8 CPU devices via
 XLA_FLAGS=--xla_force_host_platform_device_count=8); measures warm
 sharded-vs-unsharded throughput on a non-divisible batch (exercising the
@@ -38,6 +44,7 @@ Checks enforced:
   * converged-fleet while_loop early exit (rounds executed < m_max)
   * >= 2x warm per-outer-round Neumann speedup over LU at V >= 64 on CPU
   * Neumann == LU objectives to rtol 1e-3 for all methods x topologies
+  * mixed-P batched == sequential objectives to rtol 1e-3 (P in {1,2,3,4})
   * sharded == unsharded objectives to rtol 1e-5 with sharded outputs
     (when >= 2 devices are visible)
 
@@ -55,7 +62,7 @@ import numpy as np
 
 from repro.core import SCENARIOS
 from repro.fleet import METHODS, sample_fleet, solve_fleet, solve_sequential
-from repro.fleet.generator import erdos_renyi
+from repro.fleet.generator import erdos_renyi, iot_hierarchy
 
 _SMALL = bool(os.environ.get("SCALE_SMALL"))
 
@@ -227,6 +234,60 @@ def _bench_solver_parity(print_fn) -> dict:
     return out
 
 
+def _bench_partition_axis(print_fn) -> dict:
+    """The new P axis: per-depth warm solve cost and the mixed-P padded
+    batch (the ISSUE 5 tentpole's user-visible payoff)."""
+    p_set = (1, 2, 3, 4)
+    batch = 3 if _SMALL else 6
+    kw = dict(m_max=2 if _SMALL else 4, t_phi=4)
+
+    def depth_fleet(p):
+        return [
+            iot_hierarchy(seed=s, n_edge=4, devices_per_edge=3, n_apps=8,
+                          n_parts=p)
+            for s in range(batch)
+        ]
+
+    per_p = {}
+    for p in p_set:
+        fleet = depth_fleet(p)
+        solve_fleet(fleet, **kw)  # compile + warm
+        t0 = time.time()
+        res = solve_fleet(fleet, **kw)
+        warm = time.time() - t0
+        per_p[str(p)] = {
+            "warm_s": round(warm, 3),
+            "J_med": round(float(np.median(res.J)), 3),
+            "rounds_executed": int(res.rounds),
+        }
+        print_fn(
+            f"fleet,partitions P={p} K={p + 1} B={batch} warm={warm:.2f}s "
+            f"J_med={per_p[str(p)]['J_med']:.2f}"
+        )
+
+    # Mixed-P fleet: one padded batch vs the per-instance sequential path.
+    mixed = sample_fleet(batch * 2, seed=2028, partitions=(1, 2, 3, 4))
+    res = solve_fleet(mixed, **kw)
+    seq = solve_sequential(mixed, **kw)
+    for b, r in enumerate(seq):
+        np.testing.assert_allclose(res.J[b], r.J, rtol=1e-3)
+    k_env = res.hosts.shape[-1] + 1
+    print_fn(
+        f"fleet,partitions mixed-P B={len(mixed)} K_env={k_env} "
+        f"rounds={res.rounds} (one compiled padded batch; == sequential "
+        f"rtol 1e-3)"
+    )
+    return {
+        "per_p": per_p,
+        "mixed": {
+            "batch": len(mixed),
+            "k_envelope": k_env,
+            "rounds_executed": int(res.rounds),
+            "matches_sequential": True,
+        },
+    }
+
+
 def _bench_shard_axis(print_fn) -> dict:
     """The engine over a real instance-axis mesh: parity + layout guarantees
     on a non-divisible batch, warm throughput recorded for trend context."""
@@ -280,6 +341,7 @@ def run(print_fn=print, solver: str = "neumann") -> dict:
     out["early_exit"] = _bench_early_exit(print_fn)
     out["solver_axis"] = _bench_solver_axis(print_fn)
     out["solver_parity"] = _bench_solver_parity(print_fn)
+    out["partition_axis"] = _bench_partition_axis(print_fn)
     out["shard_axis"] = _bench_shard_axis(print_fn)
     return out
 

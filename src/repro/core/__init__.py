@@ -1,5 +1,9 @@
 """The paper's contribution: congestion-aware joint partition placement and
-routing for partitioned DNN inference over multi-hop edge networks."""
+routing for partitioned DNN inference over multi-hop edge networks.
+
+The whole stack is generic over the partition count: P (stages K = P + 1)
+is per-`Problem` data (`Apps.parts`), with the paper's P = 2 evaluation as
+the default scenario profile — see DESIGN.md section 13."""
 from .structs import (  # noqa: F401
     Apps,
     BIG,
@@ -11,6 +15,9 @@ from .structs import (  # noqa: F401
     app_live_mask,
     forwarding_mass,
     infer_hop_bound,
+    partition_live_mask,
+    stage_live_mask,
+    stage_targets,
     with_hop_bound,
 )
 from .flow import (  # noqa: F401
@@ -52,4 +59,5 @@ from .scenarios import (  # noqa: F401
     mesh,
     random_connected,
     smallworld,
+    stage_profile,
 )

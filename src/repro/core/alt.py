@@ -3,7 +3,7 @@
   ALT         alternating congestion-aware placement + forwarding (ours)
   OneShot     same init/objective, a single placement/forwarding round
   CongUnaware shortest extended path under linear (congestion-blind) costs
-  CoLocated   both partitions forced to one node, forwarding optimized
+  CoLocated   all partitions forced to one node, forwarding optimized
 
 All four share the structured initialization so comparisons isolate exactly
 one design axis each (alternation / congestion awareness / split flexibility).
@@ -166,9 +166,9 @@ def solve_congunaware(
 
     Implementation note: with linear costs the zero-load marginals ARE the
     link weights (D' = 1/mu, C' = 1/nu constants), so the extended-graph
-    shortest path over (stage-0 copy, partition-1 transition, stage-1 copy,
-    partition-2 transition, stage-2 copy) reduces exactly to the structured
-    initialization's joint (h1, h2) scan under the linear cost model.
+    shortest path over the stage-copy / partition-transition chain reduces
+    exactly to the structured initialization's stage DP under the linear
+    cost model (any partition count — DESIGN.md section 13).
     """
     state = structured_init(linearize(problem), use_pallas=use_pallas)
     J, aux = objective(problem, state, solver=solver)
@@ -186,7 +186,7 @@ def solve_colocated(
     use_pallas: bool = False,
     solver: str = "neumann",
 ) -> Result:
-    """Both partitions at a single node; forwarding still congestion-aware."""
+    """All partitions at a single node; forwarding still congestion-aware."""
     return solve_alt(
         problem,
         m_max=m_max,

@@ -193,7 +193,7 @@ def engine_solve(
                             final state when `track_best=False` — the
                             OneShot semantics)
       state               : the returned State (best or final)
-      hosts               : [B, A, 2] partition hosts of `state`
+      hosts               : [B, A, P] partition hosts of `state`
       history             : [B, m_max + 1] objective trace, NaN past freeze
       iters               : [B] int32 rounds applied per instance
       rounds              : scalar int32 while_loop trips actually executed

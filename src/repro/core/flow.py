@@ -10,10 +10,15 @@ forwarding matrix Phi^{a,k} is nilpotent, hence (I - Phi^T) is invertible and
 with stage sources
 
     b^{a,0} = lambda_a e_{s_a}
-    b^{a,1} = x^{a,1} .* t^{a,0}    (partition 1 host converts stage 0 -> 1)
-    b^{a,2} = x^{a,2} .* t^{a,1}.
+    b^{a,k} = x^{a,k} .* t^{a,k-1}   for 1 <= k <= parts_a
+              (the partition-k host converts stage k-1 -> k)
+    b^{a,k} = 0                      for k > parts_a (phantom stages).
 
-TPU adaptation (DESIGN.md sections 3 and 10): the fixed point is solved
+The chain is a `lax.scan` over the stage axis — one trace of the solve body
+regardless of the partition count P, which is per-`Problem` data rather than
+a structural constant (DESIGN.md section 13).
+
+TPU adaptation (DESIGN.md sections 3 and 10): each fixed point is solved
 batched over applications. The default `solver="neumann"` exploits the
 nilpotency directly — a hop-capped propagation x <- b + Phi^T x (O(H V^2)
 per solve, kernels/neumann) — while `solver="lu"` keeps the dense
@@ -28,7 +33,7 @@ import jax.numpy as jnp
 
 from . import costs
 from ..kernels.neumann import effective_hops, neumann_solve
-from .structs import Apps, Network, Problem, State, one_hot
+from .structs import Apps, Problem, State, one_hot, partition_live_mask
 
 SOLVERS = ("neumann", "lu")
 
@@ -64,6 +69,46 @@ def stage_solve(
     return neumann_solve(m, b, hops=hops, use_pallas=use_pallas, interpret=True)
 
 
+def _stage_gates(state: State, apps: Apps) -> jax.Array:
+    """[K, A, V] conversion gate of each stage: gate_k = x^{a,k} for live
+    partitions (stage k is re-injected by partition k's host), zero for
+    stage 0 (exogenous source) and for phantom stages (k > parts)."""
+    gated = state.x * partition_live_mask(apps)[:, :, None]  # [A, P, V]
+    gates = jnp.concatenate(
+        [jnp.zeros_like(gated[:, :1]), gated], axis=1
+    )  # [A, K, V]
+    return jnp.moveaxis(gates, 1, 0)
+
+
+def _traffic_scan(problem, state, inject, *, solver, use_pallas):
+    """Forward stage scan: t_k = solve(phi_k, inject_k + gate_k * t_{k-1})."""
+    solve = partial(
+        stage_solve, problem=problem, transpose=True, solver=solver,
+        use_pallas=use_pallas,
+    )
+    phi_s = jnp.moveaxis(state.phi, 1, 0)  # [K, A, V, V]
+    gates = _stage_gates(state, problem.apps)  # [K, A, V]
+
+    def step(t_prev, xs):
+        phi_k, inj_k, gate_k = xs
+        t_k = solve(phi_k, inj_k + gate_k * t_prev)
+        return t_k, t_k
+
+    _, t = jax.lax.scan(step, jnp.zeros_like(inject[0]), (phi_s, inject, gates))
+    return jnp.moveaxis(t, 0, 1)  # [A, K, V]
+
+
+def _source_injection(problem: Problem) -> jax.Array:
+    """[K, A, V] exogenous stage sources: lambda at s_a on stage 0, 0 after."""
+    n = problem.net.n_nodes
+    apps = problem.apps
+    b0 = apps.lam[:, None] * one_hot(apps.src, n)  # [A, V]
+    k = apps.L.shape[-1]
+    return jnp.concatenate(
+        [b0[None], jnp.zeros((k - 1,) + b0.shape, b0.dtype)], axis=0
+    )
+
+
 @partial(jax.jit, static_argnames=("solver", "use_pallas"))
 def stage_traffic(
     problem: Problem,
@@ -73,34 +118,56 @@ def stage_traffic(
     use_pallas: bool = False,
 ) -> jax.Array:
     """[A, K, V] traffic rate t_i^{a,k} (requests/s)."""
-    n = problem.net.n_nodes
-    apps = problem.apps
-    src_oh = one_hot(apps.src, n)  # [A, V]
-    solve = partial(
-        stage_solve, problem=problem, transpose=True, solver=solver,
-        use_pallas=use_pallas,
+    return _traffic_scan(
+        problem, state, _source_injection(problem),
+        solver=solver, use_pallas=use_pallas,
     )
-
-    b0 = apps.lam[:, None] * src_oh
-    t0 = solve(state.phi[:, 0], b0)
-    b1 = state.x[:, 0, :] * t0
-    t1 = solve(state.phi[:, 1], b1)
-    b2 = state.x[:, 1, :] * t1
-    t2 = solve(state.phi[:, 2], b2)
-    return jnp.stack([t0, t1, t2], axis=1)
 
 
 @jax.jit
 def loads(problem: Problem, state: State, t: jax.Array | None = None):
-    """Link load F [V,V] (Eq. 5) and node computation load G [V] (Eq. 6)."""
+    """Link load F [V,V] (Eq. 5) and node computation load G [V] (Eq. 6).
+
+    The stage/partition axis is accumulated by a sequential scan (one
+    fixed-shape per-stage contraction per step), NOT one fused (a, k)
+    einsum: a fused contraction's reduction pairing depends on the
+    contracted extent, so the same real stages could round differently
+    under different K envelopes. Sequential accumulation keeps the real
+    prefix's float associativity independent of K — appended phantom
+    stages are exact-zero addends — which is what makes stage padding
+    *bitwise*-inert on J (DESIGN.md section 13).
+    """
     if t is None:
         t = stage_traffic(problem, state)
     apps = problem.apps
     # f^{a,k}_{ij} = t^{a,k}_i phi^{a,k}_{ij}  (Eq. 4)
     f = t[..., :, None] * state.phi  # [A, K, V, V]
-    F = jnp.einsum("ak,akij->ij", apps.L, f)
-    # G_i = sum_a sum_p w^{a,p} x^{a,p}_i t^{a,p-1}_i
-    G = jnp.einsum("ap,apv,apv->v", apps.w, state.x, t[:, :2, :])
+
+    def accum_f(acc, xs):
+        L_k, f_k = xs  # [A], [A, V, V]
+        return acc + jnp.einsum("a,aij->ij", L_k, f_k), None
+
+    n = state.phi.shape[-1]
+    F, _ = jax.lax.scan(
+        accum_f,
+        jnp.zeros((n, n), f.dtype),
+        (jnp.moveaxis(apps.L, 1, 0), jnp.moveaxis(f, 1, 0)),
+    )
+
+    # G_i = sum_a sum_p w^{a,p} x^{a,p}_i t^{a,p-1}_i (phantom w = 0)
+    def accum_g(acc, xs):
+        w_p, x_p, t_p = xs  # [A], [A, V], [A, V]
+        return acc + jnp.einsum("a,av,av->v", w_p, x_p, t_p), None
+
+    G, _ = jax.lax.scan(
+        accum_g,
+        jnp.zeros((n,), f.dtype),
+        (
+            jnp.moveaxis(apps.w, 1, 0),
+            jnp.moveaxis(state.x, 1, 0),
+            jnp.moveaxis(t[:, :-1, :], 1, 0),
+        ),
+    )
     return F, G
 
 
@@ -166,25 +233,8 @@ def objective_with_injection(
     Differentiating the neumann path goes through custom_linear_solve's
     implicit transpose solve, not the hop loop.
     """
-    n = problem.net.n_nodes
-    apps = problem.apps
-    src_oh = one_hot(apps.src, n)
-    solve = partial(stage_solve, problem=problem, transpose=True, solver=solver)
-
-    b0 = apps.lam[:, None] * src_oh
-    if k == 0:
-        b0 = b0.at[a].add(inj)
-    t0 = solve(state.phi[:, 0], b0)
-    b1 = state.x[:, 0, :] * t0
-    if k == 1:
-        b1 = b1.at[a].add(inj)
-    t1 = solve(state.phi[:, 1], b1)
-    b2 = state.x[:, 1, :] * t1
-    if k == 2:
-        b2 = b2.at[a].add(inj)
-    t2 = solve(state.phi[:, 2], b2)
-    t = jnp.stack([t0, t1, t2], axis=1)
-
+    inject = _source_injection(problem).at[k, a].add(inj)
+    t = _traffic_scan(problem, state, inject, solver=solver, use_pallas=False)
     F, G = loads(problem, state, t)
     J, _, _ = objective_from_loads(problem, F, G)
     return J
@@ -193,10 +243,14 @@ def objective_with_injection(
 def total_absorbed(
     problem: Problem, state: State, *, solver: str = "neumann"
 ) -> jax.Array:
-    """[A] sanity metric: stage-2 traffic absorbed at each destination.
+    """[A] sanity metric: final-stage traffic absorbed at each destination.
 
-    Equals lambda_a when forwarding is consistent (conservation test)."""
+    Stage `parts_a` is app a's final stage (per-app split depths may differ
+    inside one problem); its absorbed rate equals lambda_a when forwarding
+    is consistent (conservation test)."""
     t = stage_traffic(problem, state, solver=solver)
     n = problem.net.n_nodes
-    dst_oh = one_hot(problem.apps.dst, n)
-    return jnp.sum(t[:, 2, :] * dst_oh, axis=-1)
+    apps = problem.apps
+    dst_oh = one_hot(apps.dst, n)
+    t_fin = jnp.take_along_axis(t, apps.parts[:, None, None], axis=1)[:, 0, :]
+    return jnp.sum(t_fin * dst_oh, axis=-1)

@@ -2,19 +2,24 @@
 
 Gallager's cost-to-go q summarizes the marginal increase of the whole-system
 cost per extra unit of stage-k traffic injected at node i, under the current
-forwarding state:
+forwarding state. For the final stage (k = parts_a, toward the destination):
 
-  q^{a,2}_i = sum_j phi^{a,2}_{ij} (L_{a,2} D'_{ij} + q^{a,2}_j)           (=0 at d_a)
-  q^{a,1}_i = sum_j phi^{a,1}_{ij} (L_{a,1} D'_{ij} + q^{a,1}_j)
-              + x^{a,2}_i (kappa^{a,2}_i + q^{a,2}_i)
-  q^{a,0}_i = sum_j phi^{a,0}_{ij} (L_{a,0} D'_{ij} + q^{a,0}_j)
-              + x^{a,1}_i (kappa^{a,1}_i + q^{a,1}_i)
+  q^{a,K-1}_i = sum_j phi^{a,K-1}_{ij} (L_{a,K-1} D'_{ij} + q^{a,K-1}_j)
 
-i.e. a host node absorbs the stage, pays the computation marginal kappa, and
-re-injects the next stage locally. Each line is a linear fixed point
-(I - Phi) q = c, solved batched over applications on the same propagation
-path as the traffic solve (DESIGN.md sections 3 and 10; `solver="lu"`
-keeps the dense reference).
+and for every earlier stage, the partition-(k+1) host absorbs the stage,
+pays the computation marginal kappa, and re-injects the next stage locally:
+
+  q^{a,k}_i = sum_j phi^{a,k}_{ij} (L_{a,k} D'_{ij} + q^{a,k}_j)
+              + x^{a,k+1}_i (kappa^{a,k+1}_i + q^{a,k+1}_i)
+
+Each line is a linear fixed point (I - Phi) q = c, solved batched over
+applications on the same propagation path as the traffic solve (DESIGN.md
+sections 3 and 10; `solver="lu"` keeps the dense reference). The backward
+chain is a *reversed* `lax.scan` over the stage axis — the mirror image of
+flow.py's forward scan — so the partition count P stays per-`Problem` data
+(DESIGN.md section 13). Phantom stages (k > parts) have phi = 0, kappa = 0
+and gate 0, so their cost-to-go is exactly zero and the real stages see the
+same recursion as an unpadded problem.
 
 delta^{a,k}_{ij} = L_{a,k} D'_{ij}(F_{ij}) + q^{a,k}_j  is the per-link
 forwarding marginal used by both the forwarding update and its blocking rule.
@@ -40,7 +45,7 @@ from .flow import (
     stage_solve,
     stage_traffic,
 )
-from .structs import BIG, Problem, State
+from .structs import BIG, Problem, State, partition_live_mask
 
 
 @partial(jax.jit, static_argnames=("solver", "use_pallas"))
@@ -59,7 +64,8 @@ def cost_to_go(
     dp = marginal_link_weights(problem, F)  # BIG off-edges
     dp_edges = jnp.where(problem.net.adj > 0, dp, 0.0)  # safe for sums
     kappa = marginal_comp(problem, G)  # [A, P, V]
-    L = problem.apps.L  # [A, 3]
+    apps = problem.apps
+    L = apps.L  # [A, K]
     solve = partial(
         stage_solve, problem=problem, transpose=False, solver=solver,
         use_pallas=use_pallas,
@@ -69,19 +75,33 @@ def cost_to_go(
         # c_i = sum_j phi_{ij} * L_k * D'_{ij}
         return Lk * jnp.sum(phi_k * dp_edges[None, :, :], axis=-1)
 
-    # Stage 2 (toward destinations).
-    c2 = link_term(state.phi[:, 2], L[:, 2][:, None])
-    q2 = solve(state.phi[:, 2], c2)
-    # Stage 1 (toward partition-2 hosts, then continue as stage 2).
-    c1 = link_term(state.phi[:, 1], L[:, 1][:, None])
-    c1 = c1 + state.x[:, 1, :] * (kappa[:, 1, :] + q2)
-    q1 = solve(state.phi[:, 1], c1)
-    # Stage 0 (toward partition-1 hosts, then continue as stage 1).
-    c0 = link_term(state.phi[:, 0], L[:, 0][:, None])
-    c0 = c0 + state.x[:, 0, :] * (kappa[:, 0, :] + q1)
-    q0 = solve(state.phi[:, 0], c0)
+    # Absorption gates / marginals of the *next* partition, stage-aligned:
+    # stage k is absorbed by partition k+1 (gate x^{a,k+1}, cost kappa^{a,k+1})
+    # for k < parts; the final and phantom stages have no absorption term.
+    live = partition_live_mask(apps)[:, :, None]  # [A, P, 1]
+    zeros_tail = jnp.zeros_like(state.x[:, :1])
+    gates = jnp.moveaxis(
+        jnp.concatenate([state.x * live, zeros_tail], axis=1), 1, 0
+    )  # [K, A, V]
+    kappas = jnp.moveaxis(
+        jnp.concatenate([kappa * live, zeros_tail], axis=1), 1, 0
+    )  # [K, A, V]
+    phi_s = jnp.moveaxis(state.phi, 1, 0)  # [K, A, V, V]
+    L_s = jnp.moveaxis(L, 1, 0)  # [K, A]
 
-    q = jnp.stack([q0, q1, q2], axis=1)  # [A, K, V]
+    def step(q_next, xs):
+        phi_k, L_k, gate_k, kap_k = xs
+        c = link_term(phi_k, L_k[:, None]) + gate_k * (kap_k + q_next)
+        q_k = solve(phi_k, c)
+        return q_k, q_k
+
+    _, q_rev = jax.lax.scan(
+        step,
+        jnp.zeros_like(gates[0]),
+        (phi_s, L_s, gates, kappas),
+        reverse=True,
+    )
+    q = jnp.moveaxis(q_rev, 0, 1)  # [A, K, V]
     return q, dp, kappa, t, F, G
 
 
@@ -125,7 +145,7 @@ def link_marginals(
     q, dp, kappa, t, F, G = cost_to_go(
         problem, state, solver=solver, use_pallas=use_pallas
     )
-    L = problem.apps.L  # [A, 3]
+    L = problem.apps.L  # [A, K]
     # delta[a,k,i,j] = L[a,k] * dp[i,j] + q[a,k,j]
     delta = L[:, :, None, None] * dp[None, None, :, :] + q[:, :, None, :]
     delta = jnp.where(problem.net.adj[None, None] > 0, delta, BIG)

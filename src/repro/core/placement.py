@@ -6,13 +6,21 @@ D'_{ij}(F_{ij}) serves every (application, stage): Gamma^{a,k}_{uv} =
 L_{a,k} * dist[u, v]  (the paper's section III-B observation). On TPU the APSP
 is tropical matrix squaring (kernels/minplus), not Dijkstra — DESIGN.md 3.
 
-Candidate scores (upstream comm + local comp + downstream comm):
+Candidate score of partition p (0-based; upstream comm + local comp +
+downstream comm), generic over the per-app partition count `parts`:
 
-    S_{a,1}(i) = L_{a,0} dist[s_a, i] + kappa^{a,1}_i + L_{a,1} dist[i, h^2_a]
-    S_{a,2}(i) = L_{a,1} dist[h^1_a, i] + kappa^{a,2}_i + L_{a,2} dist[i, d_a]
+    S_{a,p}(i) = L_{a,p} dist[up_a, i] + kappa^{a,p}_i
+                 + L_{a,p+1} dist[i, down_a]
 
-Partition 1 is updated first (with the current host of partition 2), then
-partition 2 with the *new* host of partition 1 (paper footnote 5).
+where `up_a` is the *new* host of partition p-1 (the source s_a for p = 0)
+and `down_a` is the *old* host of partition p+1 (the destination d_a for the
+last live partition). Partitions are updated in order p = 0..P-1 — the
+generalization of the paper's footnote 5 ("partition 1 first, then partition
+2 with the new host of partition 1") to arbitrary split depths, implemented
+as a lax.scan over the partition axis inside the application scan. Phantom
+partitions (p >= parts) are frozen in place and carry zero load, so a
+stage-padded instance sweeps bit-identically to its unpadded original
+(DESIGN.md section 13).
 
 After placement changes, stale forwarding would strand traffic (the old host
 no longer absorbs), so per (app, stage) whose target host changed we rebuild
@@ -29,7 +37,15 @@ import jax.numpy as jnp
 
 from ..kernels.minplus import apsp_with_nexthop
 from .marginals import cost_to_go
-from .structs import Problem, State, app_live_mask, one_hot
+from .structs import (
+    Problem,
+    State,
+    app_live_mask,
+    one_hot,
+    partition_live_mask,
+    stage_live_mask,
+    stage_targets,
+)
 
 
 def _sp_tree_phi(nexthop_to: jax.Array, target: jax.Array, mass: jax.Array, n: int):
@@ -64,84 +80,102 @@ def placement_update(
 
     The paper's "sequentially update" (footnote 5 + Eq. 16) is implemented as
     a lax.scan over applications with an *incrementally maintained* compute
-    load G: each reassignment removes the app's own load from its old host
-    and adds it at the chosen host before the next app is scored. Without
+    load G: each reassignment removes the app's own load from its old hosts
+    and adds it at the chosen hosts before the next app is scored. Without
     this, every app sees the same cheapest node and stampedes onto it
     (a placement 2-cycle); with it, the sweep is a genuine sequential greedy
     descent on the placement-side objective. Link marginals (the Gamma
     distances) stay fixed during the sweep, exactly as in the paper.
 
-    Under consistent forwarding, all stage-(p-1) traffic of app a is absorbed
-    at its partition-p host, so the app's own compute contribution at the
-    host is w_{a,p} * lambda_a (conservation), which is what we shift.
+    Inside each app, a second lax.scan walks the partition axis p = 0..P-1
+    (footnote 5 generalized): partition p is scored against the new host of
+    p-1 and the old host of p+1, and its load is added at the chosen host
+    before p+1 is scored. Under consistent forwarding, all stage-p traffic
+    of app a is absorbed at its partition-(p+1) host, so the app's own
+    compute contribution at the host is w_{a,p} * lambda_a (conservation),
+    which is what we shift.
     """
     n = problem.net.n_nodes
     apps = problem.apps
+    n_parts = apps.n_parts
     if ctg is None:
         ctg = cost_to_go(problem, state, solver=solver, use_pallas=use_pallas)
     q, dp, kappa, t, F, G = ctg
     dist, nexthop = apsp_with_nexthop(dp, use_pallas=use_pallas)
 
-    hosts = state.hosts()  # [A, 2]
-    L = apps.L
+    hosts = state.hosts()  # [A, P]
     cm = problem.cost
     nu = problem.net.nu
+    p_idx = jnp.arange(n_parts)
 
     from . import costs as _costs
 
     def cprime(Gv):
         return cm.w_comp * _costs.comp_cost_prime(Gv, nu, cm)
 
-    dist_from_src = dist[apps.src, :]  # [A, V]
-    dist_to_dst = dist[:, apps.dst].T  # [A, V]
-
     def body(Gv, inputs):
-        (a_src_d, a_dst_d, h1_old, h2_old, lam_a, L_a, w_a) = inputs
-        load1 = w_a[0] * lam_a
-        load2 = w_a[1] * lam_a
-        # Remove this app's own loads so kappa is the marginal of adding it.
-        Gv = Gv - load1 * jax.nn.one_hot(h1_old, n) - load2 * jax.nn.one_hot(h2_old, n)
+        (src_a, dst_a, h_old, lam_a, L_a, w_a, parts_a) = inputs
+        loads_a = w_a * lam_a  # [P]
+        live = p_idx < parts_a  # [P]
+        # Remove this app's own loads so kappa is the marginal of adding it
+        # (sequentially, in partition order — phantom loads are exact zeros).
+        def remove(g, pin):
+            h_p, load_p = pin
+            return g - load_p * jax.nn.one_hot(h_p, n), None
 
-        def pick(S, h_old):
+        Gv, _ = jax.lax.scan(remove, Gv, (h_old, loads_a))
+
+        def pick(S, h_prev):
             # Hysteresis: only move when the improvement beats move_margin
             # (damps host flapping between outer iterations).
             cand = jnp.argmin(S).astype(jnp.int32)
-            better = S[cand] < (1.0 - move_margin) * S[h_old]
-            return jnp.where(better, cand, h_old).astype(jnp.int32)
+            better = S[cand] < (1.0 - move_margin) * S[h_prev]
+            return jnp.where(better, cand, h_prev).astype(jnp.int32)
 
         if colocate:
+            w_tot = jnp.sum(jnp.where(live, w_a, 0.0))
+            load_tot = jnp.sum(jnp.where(live, loads_a, 0.0))
+            L_fin = L_a[parts_a]
             S = (
-                L_a[0] * a_src_d
-                + (w_a[0] + w_a[1]) * cprime(Gv)
-                + L_a[2] * a_dst_d
+                L_a[0] * dist[src_a, :]
+                + w_tot * cprime(Gv)
+                + L_fin * dist[:, dst_a]
             )
-            h1 = pick(S, h1_old)
-            h2 = h1
-            Gv = Gv + (load1 + load2) * jax.nn.one_hot(h1, n)
-        else:
-            S1 = L_a[0] * a_src_d + w_a[0] * cprime(Gv) + L_a[1] * dist[:, h2_old]
-            h1 = pick(S1, h1_old)
-            Gv = Gv + load1 * jax.nn.one_hot(h1, n)
-            S2 = L_a[1] * dist[h1, :] + w_a[1] * cprime(Gv) + L_a[2] * a_dst_d
-            h2 = pick(S2, h2_old)
-            Gv = Gv + load2 * jax.nn.one_hot(h2, n)
-        return Gv, (h1, h2)
+            h = pick(S, h_old[0])
+            h_new = jnp.where(live, h, h_old)
+            Gv = Gv + load_tot * jax.nn.one_hot(h, n)
+            return Gv, h_new
 
-    _, (h1, h2) = jax.lax.scan(
+        # Old downstream anchor of partition p: partition p+1's current host,
+        # or the destination for the last live partition (and phantoms).
+        down = jnp.where(
+            p_idx + 1 < parts_a,
+            jnp.concatenate([h_old[1:], dst_a[None]]),
+            dst_a,
+        )  # [P]
+
+        def step(carry, pin):
+            g, up = carry
+            live_p, h_old_p, down_p, L_up, L_dn, w_p, load_p = pin
+            S = L_up * dist[up, :] + w_p * cprime(g) + L_dn * dist[:, down_p]
+            h = jnp.where(live_p, pick(S, h_old_p), h_old_p)
+            g = g + jnp.where(live_p, load_p, 0.0) * jax.nn.one_hot(h, n)
+            return (g, h), h
+
+        (Gv, _), h_new = jax.lax.scan(
+            step,
+            (Gv, src_a),
+            (live, h_old, down, L_a[:-1], L_a[1:], w_a, loads_a),
+        )
+        return Gv, h_new
+
+    _, hosts_new = jax.lax.scan(
         body,
         G,
-        (
-            dist_from_src,
-            dist_to_dst,
-            hosts[:, 0],
-            hosts[:, 1],
-            apps.lam,
-            L,
-            apps.w,
-        ),
+        (apps.src, apps.dst, hosts, apps.lam, apps.L, apps.w, apps.parts),
     )
 
-    x_new = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+    x_new = one_hot(hosts_new, n)  # [A, P, V]
     new_state = State(x=x_new, phi=state.phi)
     return repair_phi(problem, state, new_state, nexthop)
 
@@ -150,27 +184,26 @@ def placement_update(
 def repair_phi(
     problem: Problem, old: State, new: State, nexthop: jax.Array
 ) -> State:
-    """Rebuild phi for stages whose absorption target moved (see module doc)."""
+    """Rebuild phi for stages whose absorption target moved (see module doc).
+
+    Generic over the stage axis: stage k targets the partition-(k+1) host
+    for k < parts and the destination after that (`structs.stage_targets`),
+    so the final stage — and every phantom stage — never triggers a rebuild,
+    and phantom stages keep zero mass via `stage_live_mask`."""
     n = problem.net.n_nodes
     apps = problem.apps
-    old_hosts = old.hosts()
-    new_hosts = new.hosts()
+    old_t = stage_targets(apps, old.hosts())  # [A, K]
+    new_t = stage_targets(apps, new.hosts())  # [A, K]
+    live = stage_live_mask(apps)  # [A, K]
 
-    def per_app(phi_a, oh, nh, dst):
-        h1, h2 = nh[0], nh[1]
-        # Stage 0 -> toward h1; mass 1 everywhere except the host itself.
-        m0 = 1.0 - jax.nn.one_hot(h1, n, dtype=jnp.float32)
-        tree0 = _sp_tree_phi(nexthop, h1, m0, n)
-        m1 = 1.0 - jax.nn.one_hot(h2, n, dtype=jnp.float32)
-        tree1 = _sp_tree_phi(nexthop, h2, m1, n)
-        changed1 = oh[0] != nh[0]
-        changed2 = oh[1] != nh[1]
-        phi0 = jnp.where(changed1, tree0, phi_a[0])
-        phi1 = jnp.where(changed2, tree1, phi_a[1])
-        # Stage 2 target (the destination) never moves.
-        return jnp.stack([phi0, phi1, phi_a[2]], axis=0)
+    def per_stage(phi_k, ot, nt, lv):
+        m = (1.0 - jax.nn.one_hot(nt, n, dtype=jnp.float32)) * lv
+        tree = _sp_tree_phi(nexthop, nt, m, n)
+        return jnp.where(ot != nt, tree, phi_k)
 
-    phi = jax.vmap(per_app)(new.phi, old_hosts, new_hosts, apps.dst)
+    phi = jax.vmap(jax.vmap(per_stage, in_axes=(0, 0, 0, 0)))(
+        new.phi, old_t, new_t, live
+    )
     phi = phi * app_live_mask(apps)[:, None, None, None]
     return State(x=new.x, phi=phi)
 
@@ -184,9 +217,20 @@ def structured_init(
     Zero-load marginal weights D'_{ij}(0) give the uncongested shortest-path
     metric; the placement scores (14)-(15) under these weights pick initial
     hosts, and phi is initialized to the corresponding SP next-hop trees.
+
+    The joint host selection is an O(K V^2) Viterbi-style DP over the stage
+    chain (cost-to-come M_p per candidate host, argmin backpointers, final
+    leg to the destination) rather than the O(V^P) joint enumeration the
+    P = 2 pair scan would become. At P = 2 the DP *is* the pair scan: the
+    per-path float sums associate identically, and the final tie-break key
+    (last backpointer, then host index) reproduces the row-major flat-argmin
+    pair choice exactly. Phantom partitions (p >= parts) contribute identity
+    transitions, so a stage-padded instance initializes bit-identically to
+    its unpadded original (DESIGN.md section 13).
     """
     n = problem.net.n_nodes
     apps = problem.apps
+    n_parts = apps.n_parts
     from . import costs as _costs
     from .structs import BIG
 
@@ -199,49 +243,71 @@ def structured_init(
     cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
         jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost
     )
-    kappa0 = apps.w[:, :, None] * cp0[None, None, :]  # [A, 2, V]
+    kappa0 = apps.w[:, :, None] * cp0[None, None, :]  # [A, P, V]
 
     L = apps.L
-    dist_from_src = dist[apps.src, :]
-    dist_to_dst = dist[:, apps.dst].T
+    dist_from_src = dist[apps.src, :]  # [A, V]
+    dist_to_dst = dist[:, apps.dst].T  # [A, V]
+    live = partition_live_mask(apps)  # [A, P]
+    # L_{a, parts_a}: the packet size of each app's final (destination) leg.
+    L_fin = jnp.take_along_axis(L, apps.parts[:, None], axis=1)[:, 0]  # [A]
 
     if colocate:
-        S = (
-            L[:, 0][:, None] * dist_from_src
-            + kappa0[:, 0, :]
-            + kappa0[:, 1, :]
-            + L[:, 2][:, None] * dist_to_dst
-        )
-        h1 = jnp.argmin(S, axis=-1).astype(jnp.int32)
-        h2 = h1
+        S = L[:, 0][:, None] * dist_from_src
+        for p in range(n_parts):
+            S = S + kappa0[:, p, :] * live[:, p, None]
+        S = S + L_fin[:, None] * dist_to_dst
+        h = jnp.argmin(S, axis=-1).astype(jnp.int32)
+        hosts = jnp.broadcast_to(h[:, None], (apps.n_apps, n_parts))
     else:
-        # Joint (h1, h2) zero-load scan: S[a, i, j] over candidate pairs.
-        S_pair = (
-            L[:, 0][:, None, None] * dist_from_src[:, :, None]
-            + kappa0[:, 0, :, None]
-            + L[:, 1][:, None, None] * dist[None, :, :]
-            + kappa0[:, 1, None, :]
-            + L[:, 2][:, None, None] * dist_to_dst[:, None, :]
-        )
-        flat = jnp.argmin(S_pair.reshape(S_pair.shape[0], -1), axis=-1)
-        h1 = (flat // n).astype(jnp.int32)
-        h2 = (flat % n).astype(jnp.int32)
+        # Forward DP over the partition chain: M_p(j) = cost-to-come of
+        # hosting partition p at j, with smallest-index argmin backpointers.
+        M = L[:, 0][:, None] * dist_from_src + kappa0[:, 0, :]  # [A, V]
+        ptrs = []
+        idx_j = jnp.arange(n, dtype=jnp.int32)[None, :]
+        for p in range(1, n_parts):
+            cand = M[:, :, None] + L[:, p][:, None, None] * dist[None]  # [A,V,V]
+            ptr = jnp.argmin(cand, axis=1).astype(jnp.int32)  # [A, V]
+            M_new = jnp.min(cand, axis=1) + kappa0[:, p, :]
+            live_p = live[:, p] > 0  # [A]
+            # Phantom transition: identity (cost-to-come and position pass
+            # through unchanged), keeping the real chain's values bitwise.
+            M = jnp.where(live_p[:, None], M_new, M)
+            ptrs.append(jnp.where(live_p[:, None], ptr, idx_j))
+        total = M + L_fin[:, None] * dist_to_dst  # [A, V]
 
-    x = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+        # Tie-break compatible with the historical P = 2 row-major flat
+        # argmin over (h1, h2): among minimizing final hosts j, prefer the
+        # one whose last *real* backpointer is smallest, then smallest j.
+        m = jnp.min(total, axis=-1, keepdims=True)
+        if ptrs:
+            ptrs_arr = jnp.stack(ptrs, axis=1)  # [A, P-1, V]
+            t_idx = jnp.clip(apps.parts - 2, 0, n_parts - 2)
+            ptr_last = jnp.take_along_axis(
+                ptrs_arr, t_idx[:, None, None], axis=1
+            )[:, 0, :]
+            ptr_last = jnp.where(apps.parts[:, None] >= 2, ptr_last, idx_j)
+        else:
+            ptr_last = jnp.broadcast_to(idx_j, total.shape)
+        key = jnp.where(total == m, ptr_last * n + idx_j, n * n)
+        h_last = jnp.argmin(key, axis=-1).astype(jnp.int32)
 
-    def per_app(h1a, h2a, dsta):
-        m0 = 1.0 - jax.nn.one_hot(h1a, n, dtype=jnp.float32)
-        m1 = 1.0 - jax.nn.one_hot(h2a, n, dtype=jnp.float32)
-        m2 = 1.0 - jax.nn.one_hot(dsta, n, dtype=jnp.float32)
-        return jnp.stack(
-            [
-                _sp_tree_phi(nexthop, h1a, m0, n),
-                _sp_tree_phi(nexthop, h2a, m1, n),
-                _sp_tree_phi(nexthop, dsta, m2, n),
-            ],
-            axis=0,
-        )
+        hs = [None] * n_parts
+        hs[n_parts - 1] = h_last
+        for p in range(n_parts - 1, 0, -1):
+            hs[p - 1] = jnp.take_along_axis(
+                ptrs[p - 1], hs[p][:, None], axis=1
+            )[:, 0]
+        hosts = jnp.stack(hs, axis=1)  # [A, P]
 
-    phi = jax.vmap(per_app)(h1, h2, apps.dst)
+    x = one_hot(hosts, n)  # [A, P, V]
+    targets = stage_targets(apps, hosts)  # [A, K]
+    stage_live = stage_live_mask(apps)  # [A, K]
+
+    def per_stage(tgt, lv):
+        m = (1.0 - jax.nn.one_hot(tgt, n, dtype=jnp.float32)) * lv
+        return _sp_tree_phi(nexthop, tgt, m, n)
+
+    phi = jax.vmap(jax.vmap(per_stage))(targets, stage_live)
     phi = phi * app_live_mask(apps)[:, None, None, None]
     return State(x=x, phi=phi)

@@ -24,6 +24,27 @@ DEFAULT_L = (2.0, 0.8, 0.3)
 DEFAULT_W = (0.3, 1.0)
 
 
+def stage_profile(n_parts: int) -> tuple[tuple, tuple]:
+    """(L, w) profiles for a chain of `n_parts` partitions (K = P + 1 stages).
+
+    P = 2 returns the paper's exact defaults. Other depths extend the same
+    shape: packet sizes decay geometrically from the raw input (2.0) to the
+    output (0.3) — every split point is a further compression stage — and
+    per-partition workloads ramp linearly from 0.3 up to 1.0, rescaled so
+    the app's TOTAL compute matches the P = 2 default (1.3). That keeps the
+    partition count a pure split-flexibility axis: sweeping P changes where
+    work can be cut, not how much work there is.
+    """
+    if n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    if n_parts == 2:
+        return DEFAULT_L, DEFAULT_W
+    L = np.geomspace(DEFAULT_L[0], DEFAULT_L[-1], n_parts + 1)
+    raw = np.linspace(0.3, 1.0, n_parts)
+    w = raw * (float(sum(DEFAULT_W)) / raw.sum())
+    return tuple(float(x) for x in L), tuple(float(x) for x in w)
+
+
 def build_network(n, und_edges, mu_map, nu, default_mu=10.0):
     """Assemble a `Network` from an undirected edge list + rate maps.
 
@@ -53,7 +74,12 @@ def gen_apps(
     L=DEFAULT_L,
     w=DEFAULT_W,
     load_scale: float = 1.0,
+    n_parts: int | None = None,
 ):
+    """`n_parts` selects the split depth (stage_profile); None keeps the
+    explicitly passed L/w profiles (paper defaults: P = 2)."""
+    if n_parts is not None:
+        L, w = stage_profile(n_parts)
     src = rng.choice(src_pool, size=n_apps)
     if dst_mode == "same":
         dst = src.copy()
@@ -71,7 +97,7 @@ def gen_apps(
     )
 
 
-def iot(load_scale: float = 1.0, seed: int = 0, cost: CostModel | None = None) -> Problem:
+def iot(load_scale: float = 1.0, seed: int = 0, cost: CostModel | None = None, n_parts: int | None = None) -> Problem:
     """17 nodes: 1 cloud (0), 4 edge servers (1-4), 12 IoT devices (5-16).
 
     IoT devices: weak compute, weak uplinks to two edge servers. Edge servers:
@@ -100,11 +126,11 @@ def iot(load_scale: float = 1.0, seed: int = 0, cost: CostModel | None = None) -
     nu = np.array([80.0] + [12.0] * 4 + [2.0] * 12, np.float32)
     net = build_network(n, edges, mu_map, nu)
     rng = np.random.RandomState(seed)
-    apps = gen_apps(rng, 20, np.arange(5, 17), "same", n, load_scale=load_scale)
+    apps = gen_apps(rng, 20, np.arange(5, 17), "same", n, load_scale=load_scale, n_parts=n_parts)
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
-def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None) -> Problem:
+def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None, n_parts: int | None = None) -> Problem:
     """Regular 5x5 grid, homogeneous mu = nu = 10."""
     side = 5
     n = side * side
@@ -119,11 +145,11 @@ def mesh(load_scale: float = 1.0, seed: int = 1, cost: CostModel | None = None) 
     nu = np.full(n, 10.0, np.float32)
     net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale, n_parts=n_parts)
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
-def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = None) -> Problem:
+def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = None, n_parts: int | None = None) -> Problem:
     """Fixed Watts-Strogatz instance: N=30, k=4, p=0.1 (seeded)."""
     import networkx as nx
 
@@ -133,7 +159,7 @@ def smallworld(load_scale: float = 1.0, seed: int = 2, cost: CostModel | None = 
     nu = np.full(n, 10.0, np.float32)
     net = build_network(n, edges, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 40, np.arange(n), "random", n, load_scale=load_scale, n_parts=n_parts)
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
@@ -149,12 +175,12 @@ _GEANT_EDGES = [
 ]
 
 
-def geant(load_scale: float = 1.0, seed: int = 3, cost: CostModel | None = None) -> Problem:
+def geant(load_scale: float = 1.0, seed: int = 3, cost: CostModel | None = None, n_parts: int | None = None) -> Problem:
     n = 22
     nu = np.full(n, 10.0, np.float32)
     net = build_network(n, _GEANT_EDGES, {}, nu, default_mu=10.0)
     rng = np.random.RandomState(seed)
-    apps = gen_apps(rng, 30, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, 30, np.arange(n), "random", n, load_scale=load_scale, n_parts=n_parts)
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
@@ -165,6 +191,7 @@ def random_connected(
     seed: int = 0,
     load_scale: float = 1.0,
     cost: CostModel | None = None,
+    n_parts: int | None = None,
 ) -> Problem:
     """Synthetic irregular scale family (used by the scale benchmarks)."""
     import networkx as nx
@@ -176,7 +203,7 @@ def random_connected(
     nu = rng.uniform(5.0, 15.0, size=n).astype(np.float32)
     mu_map = {e: float(rng.uniform(5.0, 15.0)) for e in edges}
     net = build_network(n, edges, mu_map, nu)
-    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale, n_parts=n_parts)
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 

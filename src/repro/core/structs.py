@@ -5,8 +5,17 @@ jitted / vmapped / sharded. Shapes use the conventions:
 
     V  = number of nodes
     A  = number of applications (DNN inference services)
-    K  = 3 traffic stages (0: raw input, 1: intermediate feature, 2: output)
-    P  = 2 partitions (partition p consumes stage p-1 traffic, emits stage p)
+    P  = number of DNN partitions carried by the arrays (the *structural*
+         partition axis; partition p consumes stage-p traffic, emits stage p+1)
+    K  = P + 1 traffic stages (0: raw input, 1..P-1: intermediate features,
+         and the final stage toward the destination)
+
+The partition count is per-`Problem` DATA, not a structural constant: each
+app carries its effective split depth in `Apps.parts` (1 <= parts <= P), and
+partitions/stages past `parts` are inert phantoms (w = 0, L = 0, zero
+forwarding mass — see DESIGN.md section 13). The paper's evaluation uses
+P = 2 / K = 3 (`N_PARTS` / `K_STAGES` below record those defaults), but every
+kernel in this package is generic over the stage axis.
 """
 from __future__ import annotations
 
@@ -22,6 +31,9 @@ BIG = jnp.float32(1e18)
 # Threshold above which a distance is considered unreachable.
 BIG_THRESHOLD = jnp.float32(1e17)
 
+# The paper's evaluation defaults (section IV): two partitions, three stages.
+# These are *defaults* for scenario construction, not structural invariants —
+# the solver stack is generic over the stage axis (DESIGN.md section 13).
 K_STAGES = 3
 N_PARTS = 2
 
@@ -58,12 +70,17 @@ _register(Network, ["adj", "mu", "nu"])
 class Apps:
     """The set A of DNN inference services.
 
-    src : [A] int32  source node s_a
-    dst : [A] int32  destination node d_a (may equal src)
-    lam : [A] input request rate lambda_a (requests/s)
-    L   : [A, 3] packet size of stage k in {0,1,2} (bits/request)
-    w   : [A, 2] per-request computation workload of partition p in {1,2}
-          (node heterogeneity is carried by nu in C_i; see DESIGN.md section 8)
+    src   : [A] int32  source node s_a
+    dst   : [A] int32  destination node d_a (may equal src)
+    lam   : [A] input request rate lambda_a (requests/s)
+    L     : [A, K] packet size of stage k (bits/request); entries past an
+            app's effective stage count (`parts` + 1) are 0
+    w     : [A, P] per-request computation workload of partition p
+            (node heterogeneity is carried by nu in C_i; DESIGN.md section 8)
+    parts : [A] int32 effective partition count of each app (1 <= parts <= P).
+            Stage `parts` is the app's final stage (absorbed at d_a); stages
+            past it are phantom padding with zero forwarding mass. Defaults
+            to the structural P = w.shape[-1] when omitted.
     """
 
     src: jax.Array
@@ -71,13 +88,33 @@ class Apps:
     lam: jax.Array
     L: jax.Array
     w: jax.Array
+    parts: jax.Array | None = None
+
+    def __post_init__(self):
+        if self.parts is None:
+            w = self.w
+            object.__setattr__(
+                self,
+                "parts",
+                jnp.full(w.shape[:-1], w.shape[-1], dtype=jnp.int32),
+            )
 
     @property
     def n_apps(self) -> int:
         return self.src.shape[-1]
 
+    @property
+    def n_parts(self) -> int:
+        """Structural partition-axis length P (>= every per-app `parts`)."""
+        return self.w.shape[-1]
 
-_register(Apps, ["src", "dst", "lam", "L", "w"])
+    @property
+    def n_stages(self) -> int:
+        """Structural stage-axis length K = P + 1."""
+        return self.L.shape[-1]
+
+
+_register(Apps, ["src", "dst", "lam", "L", "w", "parts"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,7 +191,7 @@ def with_hop_bound(problem: Problem) -> Problem:
 class State:
     """Decision variables of problem (7).
 
-    x   : [A, P, V] one-hot placement (x[a, p-1, i] = 1 iff partition p at i)
+    x   : [A, P, V] one-hot placement (x[a, p, i] = 1 iff partition p+1 at i)
     phi : [A, K, V, V] forwarding fractions phi_{ij}^{a,k}
     """
 
@@ -162,7 +199,8 @@ class State:
     phi: jax.Array
 
     def hosts(self) -> jax.Array:
-        """[A, P] int32 host node of each partition."""
+        """[A, P] int32 host node of each partition (phantom partitions
+        carry a harmless real-node index; see DESIGN.md section 13)."""
         return jnp.argmax(self.x, axis=-1)
 
 
@@ -184,18 +222,50 @@ def app_live_mask(apps: Apps) -> jax.Array:
     return (apps.lam > 0).astype(jnp.float32)
 
 
+def partition_live_mask(apps: Apps) -> jax.Array:
+    """[A, P] 1.0 where partition p is within the app's effective split
+    depth (`p < parts`), 0.0 on phantom partitions."""
+    p = jnp.arange(apps.w.shape[-1])
+    return (p[None, :] < apps.parts[..., None]).astype(jnp.float32)
+
+
+def stage_live_mask(apps: Apps) -> jax.Array:
+    """[A, K] 1.0 where stage k exists for the app (`k <= parts`; stage
+    `parts` is the final leg toward d_a), 0.0 on phantom stages."""
+    k = jnp.arange(apps.L.shape[-1])
+    return (k[None, :] <= apps.parts[..., None]).astype(jnp.float32)
+
+
+def stage_targets(apps: Apps, hosts: jax.Array) -> jax.Array:
+    """[A, K] int32 absorption target of each stage given partition `hosts`
+    [A, P]: the partition-(k+1) host for k < parts, the destination for every
+    later stage (phantom stages carry zero mass; their target only gives the
+    repair logic a stable, never-changing anchor)."""
+    k = jnp.arange(apps.L.shape[-1])
+    hosts_pad = jnp.concatenate([hosts, hosts[..., -1:]], axis=-1)  # [A, K]
+    return jnp.where(
+        k[None, :] < apps.parts[..., None], hosts_pad, apps.dst[..., None]
+    ).astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("n",))
 def forwarding_mass(state: State, apps: Apps, n: int) -> jax.Array:
     """[A, K, V] total forwarding fraction each node must emit per stage.
 
-    Eq. (2a): sum_j phi^{a,0}_{ij} = 1 - x^{a,1}_i  (partition-1 host absorbs)
-              sum_j phi^{a,1}_{ij} = 1 - x^{a,2}_i  (partition-2 host absorbs)
-    Eq. (2b): sum_j phi^{a,2}_{ij} = 0 at d_a else 1.
-
-    Apps with lambda_a = 0 have zero mass on every stage (see app_live_mask).
-    """
+    Eq. (2a): sum_j phi^{a,k}_{ij} = 1 - x^{a,k+1}_i for k < parts
+              (the partition-(k+1) host absorbs the stage)
+    Eq. (2b): sum_j phi^{a,parts}_{ij} = 0 at d_a else 1 (final stage).
+    Phantom stages (k > parts) and apps with lambda_a = 0 carry zero mass
+    (see app_live_mask / stage_live_mask)."""
     dst_oh = one_hot(apps.dst, n)  # [A, V]
-    m0 = 1.0 - state.x[:, 0, :]
-    m1 = 1.0 - state.x[:, 1, :]
-    m2 = 1.0 - dst_oh
-    return jnp.stack([m0, m1, m2], axis=1) * app_live_mask(apps)[:, None, None]
+    k = jnp.arange(state.phi.shape[-3])[None, :, None]  # [1, K, 1]
+    parts = apps.parts[:, None, None]  # [A, 1, 1]
+    x_pad = jnp.concatenate(
+        [state.x, jnp.zeros_like(state.x[:, :1])], axis=1
+    )  # [A, K, V]
+    m = jnp.where(
+        k < parts,
+        1.0 - x_pad,
+        jnp.where(k == parts, 1.0 - dst_oh[:, None, :], 0.0),
+    )
+    return m * app_live_mask(apps)[:, None, None]

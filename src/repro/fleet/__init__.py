@@ -10,10 +10,12 @@ from .pad import (  # noqa: F401
     NU_PAD,
     PadInfo,
     fleet_envelope,
+    fleet_part_envelope,
     pad_apps,
     pad_batch_to_multiple,
     pad_network,
     pad_problem,
+    pad_problem_parts,
     stack_problems,
     unify_hop_bound,
 )

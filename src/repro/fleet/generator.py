@@ -44,6 +44,7 @@ def erdos_renyi(
     seed: int = 0,
     load_scale: float = 1.0,
     cost: CostModel | None = None,
+    n_parts: int | None = None,
 ) -> Problem:
     """Connected G(n, p); defaults to expected degree ~4. Retries with a
     densified p on the rare disconnected draw so the seed fully determines
@@ -64,7 +65,10 @@ def erdos_renyi(
     rng = np.random.RandomState(seed + 1)
     mu_map, nu = _hetero_rates(rng, edges, n)
     net = build_network(n, edges, mu_map, nu)
-    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(
+        rng, n_apps, np.arange(n), "random", n, load_scale=load_scale,
+        n_parts=n_parts,
+    )
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
@@ -75,6 +79,7 @@ def barabasi_albert(
     seed: int = 0,
     load_scale: float = 1.0,
     cost: CostModel | None = None,
+    n_parts: int | None = None,
 ) -> Problem:
     """Preferential attachment: connected by construction, hub-heavy — the
     opposite degree mix of the regular mesh."""
@@ -89,7 +94,10 @@ def barabasi_albert(
     deg = np.asarray([d for _, d in sorted(g.degree())], np.float32)
     nu = (nu * (0.5 + deg / deg.mean())).astype(np.float32)
     net = build_network(n, edges, mu_map, nu)
-    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(
+        rng, n_apps, np.arange(n), "random", n, load_scale=load_scale,
+        n_parts=n_parts,
+    )
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
@@ -100,6 +108,7 @@ def iot_hierarchy(
     seed: int = 0,
     load_scale: float = 1.0,
     cost: CostModel | None = None,
+    n_parts: int | None = None,
 ) -> Problem:
     """Randomized cloud / edge-ring / IoT-device hierarchy (Fig.-3 style).
 
@@ -143,7 +152,8 @@ def iot_hierarchy(
     net = build_network(n, edges, mu_map, nu)
     a = int(n_apps if n_apps is not None else max(4, int(1.5 * n_dev)))
     apps = gen_apps(
-        rng, a, np.arange(first_dev, n), "same", n, load_scale=load_scale
+        rng, a, np.arange(first_dev, n), "same", n, load_scale=load_scale,
+        n_parts=n_parts,
     )
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
@@ -155,6 +165,7 @@ def perturbed_geant(
     n_apps: int = 30,
     load_scale: float = 1.0,
     cost: CostModel | None = None,
+    n_parts: int | None = None,
 ) -> Problem:
     """Degree-preserving rewiring + multiplicative rate jitter around GEANT.
 
@@ -174,7 +185,10 @@ def perturbed_geant(
     nu = (10.0 * jit(n)).astype(np.float32)
     mu_map = {e: float(10.0 * jit(1)[0]) for e in edges}
     net = build_network(n, edges, mu_map, nu)
-    apps = gen_apps(rng, n_apps, np.arange(n), "random", n, load_scale=load_scale)
+    apps = gen_apps(
+        rng, n_apps, np.arange(n), "random", n, load_scale=load_scale,
+        n_parts=n_parts,
+    )
     return with_hop_bound(Problem(net=net, apps=apps, cost=cost or CostModel()))
 
 
@@ -208,6 +222,7 @@ def sample_fleet(
     apps_range=(6, 20),
     load_range=(0.5, 1.2),
     cost: CostModel | None = None,
+    partitions=None,
 ) -> list[Problem]:
     """Sample a mixed ensemble of `n_instances` distinct problems.
 
@@ -218,6 +233,12 @@ def sample_fleet(
     `n_range`/`apps_range` for the ER/BA families and by the (fixed) size
     distributions of iot_hierarchy (<= 31 nodes / 36 apps at defaults) and
     perturbed_geant (22 nodes).
+
+    `partitions` is an optional sequence of split depths (e.g. (1, 2, 3))
+    cycled round-robin across instances, so the sampled fleet exercises
+    heterogeneous P — padded to one K envelope with phantom stages by
+    `fleet.stack_problems` (DESIGN.md section 13). None keeps the paper's
+    P = 2 profile everywhere.
     """
     if families is None:
         families = list(FAMILIES)
@@ -226,20 +247,31 @@ def sample_fleet(
         raise ValueError(
             f"unknown families {unknown}; expected a subset of {sorted(FAMILIES)}"
         )
+    if partitions is not None and not all(int(p) >= 1 for p in partitions):
+        raise ValueError(f"partitions must all be >= 1, got {partitions}")
     master = np.random.RandomState(seed)
     fleet = []
     for i in range(n_instances):
         fam = families[i % len(families)]
         sub = int(master.randint(0, 2**31 - 1))
         load = float(master.uniform(*load_range))
+        parts = (
+            None if partitions is None else int(partitions[i % len(partitions)])
+        )
         if fam == "iot_hierarchy":
-            fleet.append(iot_hierarchy(seed=sub, load_scale=load, cost=cost))
+            fleet.append(
+                iot_hierarchy(seed=sub, load_scale=load, cost=cost, n_parts=parts)
+            )
         elif fam == "perturbed_geant":
-            fleet.append(perturbed_geant(seed=sub, load_scale=load, cost=cost))
+            fleet.append(
+                perturbed_geant(seed=sub, load_scale=load, cost=cost, n_parts=parts)
+            )
         else:
             n = int(master.randint(n_range[0], n_range[1] + 1))
             a = int(master.randint(apps_range[0], apps_range[1] + 1))
             fleet.append(
-                FAMILIES[fam](n, a, seed=sub, load_scale=load, cost=cost)
+                FAMILIES[fam](
+                    n, a, seed=sub, load_scale=load, cost=cost, n_parts=parts
+                )
             )
     return fleet

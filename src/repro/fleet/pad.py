@@ -1,9 +1,9 @@
-"""Mask-aware padding of heterogeneous problems to a common (V, A) envelope.
+"""Mask-aware padding of heterogeneous problems to a common (V, A, P) envelope.
 
 The batched fleet solver (fleet/solve.py) vmaps the whole ALT pipeline over
 an instance axis, which requires every instance to share one static shape.
 Heterogeneous instances are padded up to the fleet envelope so that the
-padded coordinates are *provably inert* (DESIGN.md section 9):
+padded coordinates are *provably inert* (DESIGN.md sections 9 and 13):
 
   padded nodes   - no adjacency (adj = 0), BIG-sentinel link rates (mu), and
                    a vanishing compute rate nu = NU_PAD. Zero incident
@@ -15,6 +15,16 @@ padded coordinates are *provably inert* (DESIGN.md section 9):
   padded apps    - lambda = 0, L = 0, w = 0 with src = dst = node 0. They
                    route zero traffic, add zero load in the sequential
                    placement scan, and contribute zero to J.
+  padded stages  - fleets mixing split depths pad the partition axis to a
+                   common K envelope: phantom partitions carry w = 0 and
+                   L = 0 trailing entries, and `Apps.parts` records each
+                   app's real depth. Every stage-generic kernel gates on
+                   `parts` (zero forwarding mass, zero traffic injection,
+                   frozen placement, identity DP transitions), so a
+                   stage-padded instance runs BIT-identically to its
+                   unpadded original on the real stages — the section 13
+                   extension of the inertness contract, pinned by
+                   tests/test_stage_generic.py.
 
 Because every padded quantity enters the objective and the marginals
 multiplicatively through zero traffic / zero rates, the solver trajectory on
@@ -80,34 +90,48 @@ def pad_network(net: Network, n_nodes: int) -> Network:
     return Network(adj=adj, mu=mu, nu=nu)
 
 
-def pad_apps(apps: Apps, n_apps: int) -> Apps:
-    """Pad an Apps set to `n_apps` with zero-rate, zero-size phantom apps."""
+def pad_apps(apps: Apps, n_apps: int, n_parts: int | None = None) -> Apps:
+    """Pad an Apps set to `n_apps` with zero-rate, zero-size phantom apps,
+    and (optionally) the partition axis to `n_parts` with phantom stages.
+
+    Phantom partitions append L = 0 / w = 0 trailing entries; `parts` keeps
+    each real app's split depth, which is what gates every stage-generic
+    kernel (module doc). Phantom *apps* get parts = 1 — any valid depth, as
+    lambda = 0 already makes the whole app inert."""
     a = apps.n_apps
+    p_old = apps.n_parts
+    p_new = p_old if n_parts is None else n_parts
     if n_apps < a:
         raise ValueError(f"cannot pad {a} apps down to {n_apps}")
-    if n_apps == a:
+    if p_new < p_old:
+        raise ValueError(f"cannot pad {p_old} partitions down to {p_new}")
+    if n_apps == a and p_new == p_old:
         return apps
     pad = n_apps - a
+    ppad = p_new - p_old
     return Apps(
         src=jnp.pad(apps.src, (0, pad)),
         dst=jnp.pad(apps.dst, (0, pad)),
         lam=jnp.pad(apps.lam, (0, pad)),
-        L=jnp.pad(apps.L, ((0, pad), (0, 0))),
-        w=jnp.pad(apps.w, ((0, pad), (0, 0))),
+        L=jnp.pad(apps.L, ((0, pad), (0, ppad))),
+        w=jnp.pad(apps.w, ((0, pad), (0, ppad))),
+        parts=jnp.pad(apps.parts, (0, pad), constant_values=1),
     )
 
 
 def pad_problem(
-    problem: Problem, n_nodes: int, n_apps: int
+    problem: Problem, n_nodes: int, n_apps: int, n_parts: int | None = None
 ) -> tuple[Problem, PadInfo]:
-    """Pad one problem to the (n_nodes, n_apps) envelope; returns masks.
+    """Pad one problem to the (n_nodes, n_apps[, n_parts]) envelope; returns
+    masks.
 
     Padded nodes are disconnected, so the graph diameter — and with it the
-    carried `hop_bound` — is unchanged by padding."""
+    carried `hop_bound` — is unchanged by padding. Phantom stages carry no
+    traffic, so they don't move the bound either."""
     v, a = problem.net.n_nodes, problem.apps.n_apps
     padded = Problem(
         net=pad_network(problem.net, n_nodes),
-        apps=pad_apps(problem.apps, n_apps),
+        apps=pad_apps(problem.apps, n_apps, n_parts),
         cost=problem.cost,
         hop_bound=problem.hop_bound,
     )
@@ -116,6 +140,16 @@ def pad_problem(
         app_mask=(jnp.arange(n_apps) < a).astype(jnp.float32),
     )
     return padded, info
+
+
+def pad_problem_parts(problem: Problem, n_parts: int) -> Problem:
+    """Pad ONLY the partition axis to `n_parts` (phantom stages; module doc).
+
+    The stage-generic inertness contract says this is bitwise-invisible to
+    the solver: same J, same real-stage traffic, same placements."""
+    return dataclasses.replace(
+        problem, apps=pad_apps(problem.apps, problem.apps.n_apps, n_parts)
+    )
 
 
 def fleet_envelope(problems, round_to: int = 1) -> tuple[int, int]:
@@ -132,6 +166,14 @@ def fleet_envelope(problems, round_to: int = 1) -> tuple[int, int]:
     v = up(max(p.net.n_nodes for p in problems))
     a = up(max(p.apps.n_apps for p in problems))
     return v, a
+
+
+def fleet_part_envelope(problems) -> int:
+    """Common partition-axis envelope: the max structural P over the fleet.
+
+    Instances below it get phantom stages (module doc) — never rounded up
+    beyond the max, since each extra stage costs a [A, V, V] phi slab."""
+    return max(p.apps.n_parts for p in problems)
 
 
 def unify_hop_bound(problems) -> int:
@@ -170,7 +212,7 @@ def pad_batch_to_multiple(problems, multiple: int) -> tuple[list, int]:
 
 def stack_problems(
     problems, round_to: int = 1, envelope: tuple[int, int] | None = None,
-    hop_bound: int | None = None,
+    hop_bound: int | None = None, n_parts: int | None = None,
 ) -> tuple[Problem, PadInfo]:
     """Pad every instance to the fleet envelope and stack into one pytree.
 
@@ -178,11 +220,15 @@ def stack_problems(
     leading instance axis of length len(problems). Requires every cost
     model to share `kind` (it is static metadata selecting a code path);
     rho_max / w_comm / w_comp may differ per instance. Per-instance
-    `hop_bound`s are unified to the batch max (see `unify_hop_bound`).
+    `hop_bound`s are unified to the batch max (see `unify_hop_bound`);
+    heterogeneous split depths are padded to the fleet's partition envelope
+    with inert phantom stages, so one compiled program serves a mixed-P
+    ensemble (DESIGN.md section 13).
 
-    `envelope` / `hop_bound` override the computed (V, A) envelope and the
-    unified bound — the chunked fleet path passes the *global* values so
-    every chunk compiles to the same program.
+    `envelope` / `hop_bound` / `n_parts` override the computed (V, A)
+    envelope, the unified bound, and the partition envelope — the chunked
+    fleet path passes the *global* values so every chunk compiles to the
+    same program.
     """
     if not problems:
         raise ValueError("empty fleet")
@@ -193,9 +239,10 @@ def stack_problems(
             "static metadata and must be uniform within one batch"
         )
     v, a = envelope if envelope is not None else fleet_envelope(problems, round_to=round_to)
+    p_env = n_parts if n_parts is not None else fleet_part_envelope(problems)
     hb = hop_bound if hop_bound is not None else unify_hop_bound(problems)
     problems = [dataclasses.replace(p, hop_bound=hb) for p in problems]
-    padded, infos = zip(*(pad_problem(p, v, a) for p in problems))
+    padded, infos = zip(*(pad_problem(p, v, a, p_env) for p in problems))
     def stack(*xs):
         # Leaves are arrays except the CostModel scalars, which may still be
         # Python floats; asarray unifies both before stacking.

@@ -50,9 +50,14 @@ from ..core.alt import ALL_METHODS, linearize, method_kwargs
 from ..core.engine import engine_solve
 from ..core.flow import objective
 from ..core.placement import structured_init
-from ..core.structs import K_STAGES, Problem
+from ..core.structs import Problem
 from ..distributed.sharding import carries_fleet_sharding, shard_fleet
-from .pad import fleet_envelope, stack_problems, unify_hop_bound
+from .pad import (
+    fleet_envelope,
+    fleet_part_envelope,
+    stack_problems,
+    unify_hop_bound,
+)
 
 METHODS = ("ALT", "OneShot", "CongUnaware", "CoLocated")
 
@@ -111,8 +116,11 @@ class FleetResult:
     iters               : [B] outer iterations actually applied per instance
     rounds              : outer while_loop trips actually executed (max over
                           chunks); < m_max whenever every instance froze early
-    hosts               : [B, A, 2] chosen partition hosts (padded apps hold
-                          meaningless-but-harmless indices)
+    hosts               : [B, A, P] chosen partition hosts over the fleet's
+                          partition envelope (padded apps and phantom
+                          partitions hold meaningless-but-harmless indices)
+    parts               : [B, A] effective per-app partition counts (phantom
+                          partitions past these are padding)
     node_mask/app_mask  : [B, V] / [B, A] validity masks from padding
     shard               : the instance-axis layout decision (`ShardPlan`)
     """
@@ -125,6 +133,7 @@ class FleetResult:
     iters: np.ndarray
     rounds: int
     hosts: np.ndarray
+    parts: np.ndarray
     node_mask: np.ndarray
     app_mask: np.ndarray
     shard: ShardPlan = dataclasses.field(
@@ -140,20 +149,32 @@ class FleetResult:
         for b in range(self.n_instances):
             hist = self.history[b]
             n_real = int(self.node_mask[b].sum())
-            hosts = self.hosts[b][self.app_mask[b] > 0]
+            real = self.app_mask[b] > 0
+            hosts = self.hosts[b][real]
+            parts = self.parts[b][real].astype(int)
+            # Only the real partitions of real apps count: phantom-partition
+            # hosts are padding, trimmed before the leak check below.
+            real_hosts = [h[:pa] for h, pa in zip(hosts, parts)]
             # Padded-envelope indices must never leak to consumers: a host
             # beyond the real-node block would be a solver bug (padded
             # nodes carry a prohibitive marginal compute cost), so flag it
             # and clamp into the valid range either way.
-            leaked = int(np.sum(hosts >= n_real))
-            hosts = np.minimum(hosts, n_real - 1)
+            leaked = int(sum(np.sum(h >= n_real) for h in real_hosts))
             row = {
                 "J": float(self.J[b]),
                 "J_comm": float(self.J_comm[b]),
                 "J_comp": float(self.J_comp[b]),
                 "history": [float(h) for h in hist[~np.isnan(hist)]],
                 "iters": int(self.iters[b]),
-                "hosts": hosts.tolist(),
+                "hosts": [
+                    np.minimum(h, n_real - 1).tolist() for h in real_hosts
+                ],
+                # The instance's split depth(s): one int when uniform, else
+                # the per-app list (heterogeneous per-app splits are legal).
+                "partitions": (
+                    int(parts[0]) if len(set(parts.tolist())) <= 1
+                    else parts.tolist()
+                ),
             }
             if leaked:
                 row["padded_host_leaks"] = leaked
@@ -260,7 +281,10 @@ def _plan_mesh(shard: bool, devices: int | None):
     return mesh, n_dev, "sharded"
 
 
-def _run_chunk(problems, *, envelope, hop_bound, round_to, mesh, batch_to, solve_kw):
+def _run_chunk(
+    problems, *, envelope, hop_bound, n_parts, round_to, mesh, batch_to,
+    solve_kw,
+):
     """Stack (and, when sharding, pad + commit) one chunk and solve it.
 
     batch_to : pad the lane count up to this target with inert repeats (the
@@ -276,11 +300,13 @@ def _run_chunk(problems, *, envelope, hop_bound, round_to, mesh, batch_to, solve
     if target > real:
         problems = list(problems) + [problems[0]] * (target - real)
     stacked, info = stack_problems(
-        problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound
+        problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound,
+        n_parts=n_parts,
     )
     if mesh is not None:
         stacked, info = shard_fleet((stacked, info), mesh)
     out = _solve_fleet_stacked(stacked, **solve_kw)
+    out["parts"] = stacked.apps.parts
     sharded_out = mesh is not None and carries_fleet_sharding(out["J"])
     if mesh is not None and not sharded_out:
         # The whole point of PR 4: a layout change must never be silent.
@@ -306,7 +332,8 @@ def envelope_cap_chunk(
     if cap_gb <= 0:
         raise ValueError(f"envelope_cap_gb must be positive, got {cap_gb}")
     v, a = fleet_envelope(problems, round_to=round_to)
-    per_lane_bytes = _PHI_COPIES * a * K_STAGES * v * v * 4
+    k_stages = fleet_part_envelope(problems) + 1
+    per_lane_bytes = _PHI_COPIES * a * k_stages * v * v * 4
     lanes_per_device = max(1, int(cap_gb * 2**30 // per_lane_bytes))
     return lanes_per_device * max(1, n_devices)
 
@@ -384,18 +411,20 @@ def solve_fleet(
     chunk_kw = dict(round_to=round_to, mesh=mesh, solve_kw=solve_kw)
     if chunk_size is None or n <= chunk_size:
         outs = [
-            _run_chunk(problems, envelope=None, hop_bound=None,
+            _run_chunk(problems, envelope=None, hop_bound=None, n_parts=None,
                        batch_to=None, **chunk_kw)
         ]
     else:
-        # One global envelope + hop bound so every chunk hits the same
-        # compiled program.
+        # One global envelope + hop bound + partition envelope so every
+        # chunk hits the same compiled program.
         envelope = fleet_envelope(problems, round_to=round_to)
         hop_bound = unify_hop_bound(problems)
+        part_env = fleet_part_envelope(problems)
         outs = [
             _run_chunk(
                 list(problems[i : i + chunk_size]), envelope=envelope,
-                hop_bound=hop_bound, batch_to=chunk_size, **chunk_kw,
+                hop_bound=hop_bound, n_parts=part_env, batch_to=chunk_size,
+                **chunk_kw,
             )
             for i in range(0, n, chunk_size)
         ]
@@ -424,6 +453,7 @@ def solve_fleet(
         iters=gather(lambda o, i: o["iters"]),
         rounds=max(int(o["rounds"]) for (o, _, _, _, _) in outs),
         hosts=gather(lambda o, i: o["hosts"]),
+        parts=gather(lambda o, i: o["parts"]),
         node_mask=gather(lambda o, i: i.node_mask),
         app_mask=gather(lambda o, i: i.app_mask),
         shard=plan,

@@ -33,6 +33,14 @@ def main(argv=None) -> int:
     ap.add_argument("--instances", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
+        "--partitions",
+        default=None,
+        help="comma-separated DNN split depths (e.g. 1,2,3) cycled across "
+        "instances — heterogeneous P is padded to one K envelope with inert "
+        "phantom stages and solved as a single batch; with --scenario the "
+        "first value sets the whole grid's depth. Default: the paper's P=2",
+    )
+    ap.add_argument(
         "--scenario",
         choices=list(SCENARIOS),
         default=None,
@@ -86,16 +94,23 @@ def main(argv=None) -> int:
     )
     args = ap.parse_args(argv)
 
+    partitions = (
+        [int(x) for x in args.partitions.split(",")] if args.partitions else None
+    )
     if args.scenario:
         scales = (
             [float(s) for s in args.load_grid.split(",")]
             if args.load_grid
             else [1.0] * args.instances
         )
-        fleet = load_grid(SCENARIOS[args.scenario], scales)
+        grid_kw = {"n_parts": partitions[0]} if partitions else {}
+        fleet = load_grid(SCENARIOS[args.scenario], scales, **grid_kw)
     else:
         families = args.families.split(",") if args.families else None
-        fleet = sample_fleet(args.instances, families=families, seed=args.seed)
+        fleet = sample_fleet(
+            args.instances, families=families, seed=args.seed,
+            partitions=partitions,
+        )
 
     t0 = time.time()
     res = solve_fleet(
@@ -117,6 +132,11 @@ def main(argv=None) -> int:
                 "method": res.method,
                 "solver": args.solver,
                 "instances": res.n_instances,
+                # split depths in the batch (per-instance P also appears in
+                # each per_instance row as "partitions")
+                "partition_mix": sorted(
+                    {int(p) for p in res.parts[res.app_mask > 0]}
+                ),
                 "wall_s": round(dt, 2),
                 "inst_per_s": round(res.n_instances / dt, 3),
                 # while_loop trips actually executed: < m_max means the whole

@@ -2,7 +2,10 @@
 
 Every architecture enters problem (7) as an `ArchProfile`: the three stage
 packet sizes (L0 raw input, L1 split-point activation, L2 final output) and
-the two per-request partition workloads (w1, w2 in FLOPs). This is the
+the two per-request partition workloads (w1, w2 in FLOPs). The optimizer
+core itself is stage-generic (any P — DESIGN.md section 13); this bridge
+currently emits the paper's 2-partition profiles, with multi-split-point
+chains per architecture a ROADMAP item. This is the
 "directly measured from a test run" quantity of the paper's Eq. (6) — here
 derived analytically from the architecture config (and cross-checked against
 the models in tests).

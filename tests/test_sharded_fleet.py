@@ -42,6 +42,8 @@ from repro.fleet import (
     ShardPlan,
     envelope_cap_chunk,
     pad_batch_to_multiple,
+    pad_problem_parts,
+    sample_fleet,
     solve_fleet,
     stack_problems,
 )
@@ -326,3 +328,57 @@ class TestInertnessAcrossShards:
                 np.concatenate([rotated.hosts[-r:], rotated.hosts[:-r]]),
                 base.hosts,
             )
+
+
+# ---------------------------------------------------------------------------
+# Phantom *stages* across shard boundaries (DESIGN.md section 13)
+# ---------------------------------------------------------------------------
+@needs_mesh
+class TestStagePaddingAcrossShards:
+    """The section 9 inertness contract extended to the stage axis on a real
+    mesh: padding split depths (phantom stages, `Apps.parts` gating) must be
+    bitwise-invisible to every real lane regardless of which device it lands
+    on, and mixed-P fleets must keep sharded == unsharded parity."""
+
+    def test_mixed_p_fleet_sharded_parity(self):
+        fleet = sample_fleet(8, seed=21, partitions=(1, 2, 3))
+        assert sorted({p.apps.n_parts for p in fleet}) == [1, 2, 3]
+        res_s = solve_fleet(fleet, shard=True, **SOLVE_KW)
+        res_u = solve_fleet(fleet, shard=False, **SOLVE_KW)
+        _assert_parity(res_s, res_u)
+        assert res_s.shard.sharded and res_s.shard.output_sharded
+
+    def test_stage_padding_bitwise_on_mesh(self):
+        """Padding every instance of the P=2 pool to K=5 (P=4 envelope with
+        two phantom stages each) leaves the sharded solve bitwise on J,
+        history, and the real partitions' hosts."""
+        pool = _pool()
+        base = solve_fleet(pool, shard=True, **SOLVE_KW)
+        padded = [pad_problem_parts(p, 4) for p in pool]
+        res = solve_fleet(padded, shard=True, **SOLVE_KW)
+        assert res.shard.output_sharded
+        np.testing.assert_array_equal(res.J, base.J)
+        np.testing.assert_array_equal(res.history, base.history)
+        np.testing.assert_array_equal(res.iters, base.iters)
+        np.testing.assert_array_equal(res.hosts[:, :, :2], base.hosts)
+
+    @settings(max_examples=4, deadline=None)
+    @given(
+        k_env=st.integers(min_value=4, max_value=6),
+        rot=st.integers(min_value=0, max_value=7),
+    )
+    def test_property_stage_padding_and_rotation_bitwise(self, k_env, rot):
+        """For any K envelope and lane rotation: real results are bitwise
+        unchanged by phantom stages, wherever each lane lands."""
+        pool = _pool()
+        base = solve_fleet(pool, shard=True, **SOLVE_KW)
+        padded = [pad_problem_parts(p, k_env - 1) for p in pool]
+        r = rot % len(padded)
+        rotated = padded[r:] + padded[:r]
+        res = solve_fleet(rotated, shard=True, **SOLVE_KW)
+        J = np.concatenate([res.J[-r:], res.J[:-r]]) if r else res.J
+        hosts = (
+            np.concatenate([res.hosts[-r:], res.hosts[:-r]]) if r else res.hosts
+        )
+        np.testing.assert_array_equal(J, base.J)
+        np.testing.assert_array_equal(hosts[:, :, :2], base.hosts)

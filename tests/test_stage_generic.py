@@ -1,0 +1,597 @@
+"""Stage-generic core tests (ISSUE 5, DESIGN.md section 13).
+
+The refactor made the partition count P (stages K = P + 1) per-`Problem`
+data instead of a structural constant: `lax.scan` stage chains in
+flow/marginals, a partition scan inside the placement sweep, a Viterbi-style
+DP init, and phantom-stage padding for mixed-P fleets. What is pinned here:
+
+  * P = 2 parity — the stage-generic primitives and the full `solve_alt` /
+    `solve_fleet` reproduce the PRE-refactor implementation on all four
+    paper topologies at rtol 1e-5. The oracle below is the deleted
+    unrolled-t0/t1/t2 + q2->q1->q0 + pair-scan-init + explicit-h1/h2 code,
+    kept verbatim (the test_engine.py oracle pattern);
+  * phantom-stage inertness — the DESIGN.md section 9 contract extended to
+    the stage axis: padding a P = 2 instance to a larger K is *bitwise*
+    inert on J, real-stage traffic, and placements (hypothesis property);
+  * P = 3 end-to-end — an IoT-tree scenario through `solve_fleet` with
+    conservation and monotone best-iterate J, and a mixed-P fleet solved as
+    one compiled padded batch;
+  * K-sweep smoke — P = 1..4 x all four methods (the CI job that keeps
+    stage-genericity from regressing to a P = 2 fast path).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _optional_deps import given, settings, st
+
+from repro.core import (
+    SCENARIOS,
+    State,
+    forwarding_mass,
+    iot,
+    placement_update,
+    solve_alt,
+    solve_colocated,
+    stage_traffic,
+    structured_init,
+    total_absorbed,
+)
+from repro.core import costs as _costs
+from repro.core.flow import stage_solve
+from repro.core.marginals import cost_to_go
+from repro.core.structs import BIG, BIG_THRESHOLD, app_live_mask, one_hot
+from repro.kernels.minplus import apsp_with_nexthop
+from repro.fleet import (
+    METHODS,
+    pad_problem_parts,
+    sample_fleet,
+    solve_fleet,
+    solve_sequential,
+)
+from repro.fleet.generator import erdos_renyi, iot_hierarchy
+
+KW = dict(m_max=6, t_phi=5, alpha=0.5, tol=1e-3, patience=3)
+
+
+# ===========================================================================
+# PRE-REFACTOR ORACLE — the deleted P = 2 implementation, kept verbatim.
+# Unrolled stage chains, explicit h1/h2 sweep, joint pair-scan init. Only
+# trivial renames (old_ prefixes) and the removal of jit decorators differ
+# from the deleted source; every arithmetic expression is untouched.
+# ===========================================================================
+def old_forwarding_mass(state, apps, n):
+    dst_oh = one_hot(apps.dst, n)  # [A, V]
+    m0 = 1.0 - state.x[:, 0, :]
+    m1 = 1.0 - state.x[:, 1, :]
+    m2 = 1.0 - dst_oh
+    return jnp.stack([m0, m1, m2], axis=1) * app_live_mask(apps)[:, None, None]
+
+
+def old_stage_traffic(problem, state, *, solver="neumann"):
+    n = problem.net.n_nodes
+    apps = problem.apps
+    src_oh = one_hot(apps.src, n)  # [A, V]
+    solve = functools.partial(
+        stage_solve, problem=problem, transpose=True, solver=solver
+    )
+    b0 = apps.lam[:, None] * src_oh
+    t0 = solve(state.phi[:, 0], b0)
+    b1 = state.x[:, 0, :] * t0
+    t1 = solve(state.phi[:, 1], b1)
+    b2 = state.x[:, 1, :] * t1
+    t2 = solve(state.phi[:, 2], b2)
+    return jnp.stack([t0, t1, t2], axis=1)
+
+
+def old_loads(problem, state, t):
+    apps = problem.apps
+    f = t[..., :, None] * state.phi  # [A, K, V, V]
+    F = jnp.einsum("ak,akij->ij", apps.L, f)
+    G = jnp.einsum("ap,apv,apv->v", apps.w, state.x, t[:, :2, :])
+    return F, G
+
+
+def old_objective_from_loads(problem, F, G):
+    net, cm = problem.net, problem.cost
+    D = _costs.link_cost(F, net.mu, cm) * net.adj
+    C = _costs.comp_cost(G, net.nu, cm)
+    j_comm = jnp.sum(D)
+    j_comp = jnp.sum(C)
+    J = cm.w_comm * j_comm + cm.w_comp * j_comp
+    return J, j_comm, j_comp
+
+
+def old_cost_to_go(problem, state, *, solver="neumann"):
+    t = old_stage_traffic(problem, state, solver=solver)
+    F, G = old_loads(problem, state, t)
+    cm = problem.cost
+    dp = cm.w_comm * _costs.link_cost_prime(F, problem.net.mu, cm)
+    dp = jnp.where(problem.net.adj > 0, dp, BIG)
+    dp_edges = jnp.where(problem.net.adj > 0, dp, 0.0)
+    cp = cm.w_comp * _costs.comp_cost_prime(G, problem.net.nu, cm)
+    kappa = problem.apps.w[:, :, None] * cp[None, None, :]  # [A, P, V]
+    L = problem.apps.L  # [A, 3]
+    solve = functools.partial(
+        stage_solve, problem=problem, transpose=False, solver=solver
+    )
+
+    def link_term(phi_k, Lk):
+        return Lk * jnp.sum(phi_k * dp_edges[None, :, :], axis=-1)
+
+    c2 = link_term(state.phi[:, 2], L[:, 2][:, None])
+    q2 = solve(state.phi[:, 2], c2)
+    c1 = link_term(state.phi[:, 1], L[:, 1][:, None])
+    c1 = c1 + state.x[:, 1, :] * (kappa[:, 1, :] + q2)
+    q1 = solve(state.phi[:, 1], c1)
+    c0 = link_term(state.phi[:, 0], L[:, 0][:, None])
+    c0 = c0 + state.x[:, 0, :] * (kappa[:, 0, :] + q1)
+    q0 = solve(state.phi[:, 0], c0)
+
+    q = jnp.stack([q0, q1, q2], axis=1)  # [A, K, V]
+    return q, dp, kappa, t, F, G
+
+
+def old_round_eval(problem, state, *, solver="neumann"):
+    ctg = old_cost_to_go(problem, state, solver=solver)
+    J, j_comm, j_comp = old_objective_from_loads(problem, ctg[4], ctg[5])
+    return J, {"J": J, "J_comm": j_comm, "J_comp": j_comp, "ctg": ctg}
+
+
+def old_link_marginals(problem, state, *, solver="neumann"):
+    q, dp, kappa, t, F, G = old_cost_to_go(problem, state, solver=solver)
+    L = problem.apps.L
+    delta = L[:, :, None, None] * dp[None, None, :, :] + q[:, :, None, :]
+    delta = jnp.where(problem.net.adj[None, None] > 0, delta, BIG)
+    return delta, q
+
+
+_PRUNE = 1e-9
+
+
+def old_forwarding_sweep(problem, state, alpha=0.5, *, solver="neumann", mass=None):
+    n = problem.net.n_nodes
+    delta, q = old_link_marginals(problem, state, solver=solver)
+    if mass is None:
+        mass = old_forwarding_mass(state, problem.apps, n)
+    delta_min = jnp.min(delta, axis=-1, keepdims=True)
+    jstar = jnp.argmin(delta, axis=-1)
+    jstar_oh = jax.nn.one_hot(jstar, n, dtype=state.phi.dtype)
+    edge = delta < BIG_THRESHOLD
+    gap = jnp.where(edge, delta - delta_min, 0.0)
+    rel = gap / (jnp.abs(delta_min) + gap + 1e-12)
+    rate = alpha * rel
+    q_i = q[..., :, None]
+    q_j = q[..., None, :]
+    improper = ~(q_j < q_i)
+    rate = jnp.where(improper, alpha, rate)
+    phi = state.phi * (1.0 - rate)
+    phi = jnp.where(phi < _PRUNE, 0.0, phi)
+    phi = phi * (1.0 - jstar_oh)
+    others = jnp.sum(phi, axis=-1)
+    phi = phi + jstar_oh * jnp.maximum(mass - others, 0.0)[..., None]
+    return State(x=state.x, phi=phi)
+
+
+@functools.partial(jax.jit, static_argnames=("t_phi", "alpha"))
+def old_forwarding_update(problem, state, *, t_phi=8, alpha=0.5):
+    mass = old_forwarding_mass(state, problem.apps, problem.net.n_nodes)
+
+    def body(_, s):
+        return old_forwarding_sweep(problem, s, alpha=alpha, mass=mass)
+
+    return jax.lax.fori_loop(0, t_phi, body, state)
+
+
+def _old_sp_tree_phi(nexthop_to, target, mass, n):
+    nh = nexthop_to[:, target]
+    rows = jax.nn.one_hot(nh, n, dtype=jnp.float32)
+    return rows * mass[:, None]
+
+
+def old_repair_phi(problem, old, new, nexthop):
+    n = problem.net.n_nodes
+    apps = problem.apps
+    old_hosts = old.hosts()
+    new_hosts = new.hosts()
+
+    def per_app(phi_a, oh, nh, dst):
+        h1, h2 = nh[0], nh[1]
+        m0 = 1.0 - jax.nn.one_hot(h1, n, dtype=jnp.float32)
+        tree0 = _old_sp_tree_phi(nexthop, h1, m0, n)
+        m1 = 1.0 - jax.nn.one_hot(h2, n, dtype=jnp.float32)
+        tree1 = _old_sp_tree_phi(nexthop, h2, m1, n)
+        changed1 = oh[0] != nh[0]
+        changed2 = oh[1] != nh[1]
+        phi0 = jnp.where(changed1, tree0, phi_a[0])
+        phi1 = jnp.where(changed2, tree1, phi_a[1])
+        return jnp.stack([phi0, phi1, phi_a[2]], axis=0)
+
+    phi = jax.vmap(per_app)(new.phi, old_hosts, new_hosts, apps.dst)
+    phi = phi * app_live_mask(apps)[:, None, None, None]
+    return State(x=new.x, phi=phi)
+
+
+@functools.partial(jax.jit, static_argnames=("colocate", "move_margin"))
+def old_placement_update(problem, state, ctg=None, *, colocate=False, move_margin=0.02):
+    n = problem.net.n_nodes
+    apps = problem.apps
+    if ctg is None:
+        ctg = old_cost_to_go(problem, state)
+    q, dp, kappa, t, F, G = ctg
+    dist, nexthop = apsp_with_nexthop(dp)
+
+    hosts = state.hosts()  # [A, 2]
+    L = apps.L
+    cm = problem.cost
+    nu = problem.net.nu
+
+    def cprime(Gv):
+        return cm.w_comp * _costs.comp_cost_prime(Gv, nu, cm)
+
+    dist_from_src = dist[apps.src, :]  # [A, V]
+    dist_to_dst = dist[:, apps.dst].T  # [A, V]
+
+    def body(Gv, inputs):
+        (a_src_d, a_dst_d, h1_old, h2_old, lam_a, L_a, w_a) = inputs
+        load1 = w_a[0] * lam_a
+        load2 = w_a[1] * lam_a
+        Gv = Gv - load1 * jax.nn.one_hot(h1_old, n) - load2 * jax.nn.one_hot(h2_old, n)
+
+        def pick(S, h_old):
+            cand = jnp.argmin(S).astype(jnp.int32)
+            better = S[cand] < (1.0 - move_margin) * S[h_old]
+            return jnp.where(better, cand, h_old).astype(jnp.int32)
+
+        if colocate:
+            S = (
+                L_a[0] * a_src_d
+                + (w_a[0] + w_a[1]) * cprime(Gv)
+                + L_a[2] * a_dst_d
+            )
+            h1 = pick(S, h1_old)
+            h2 = h1
+            Gv = Gv + (load1 + load2) * jax.nn.one_hot(h1, n)
+        else:
+            S1 = L_a[0] * a_src_d + w_a[0] * cprime(Gv) + L_a[1] * dist[:, h2_old]
+            h1 = pick(S1, h1_old)
+            Gv = Gv + load1 * jax.nn.one_hot(h1, n)
+            S2 = L_a[1] * dist[h1, :] + w_a[1] * cprime(Gv) + L_a[2] * a_dst_d
+            h2 = pick(S2, h2_old)
+            Gv = Gv + load2 * jax.nn.one_hot(h2, n)
+        return Gv, (h1, h2)
+
+    _, (h1, h2) = jax.lax.scan(
+        body,
+        G,
+        (dist_from_src, dist_to_dst, hosts[:, 0], hosts[:, 1], apps.lam, L, apps.w),
+    )
+
+    x_new = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+    new_state = State(x=x_new, phi=state.phi)
+    return old_repair_phi(problem, state, new_state, nexthop)
+
+
+@functools.partial(jax.jit, static_argnames=("colocate",))
+def old_structured_init(problem, *, colocate=False):
+    n = problem.net.n_nodes
+    apps = problem.apps
+
+    dp0 = problem.cost.w_comm * _costs.link_cost_prime(
+        jnp.zeros_like(problem.net.mu), problem.net.mu, problem.cost
+    )
+    dp0 = jnp.where(problem.net.adj > 0, dp0, BIG)
+    dist, nexthop = apsp_with_nexthop(dp0)
+
+    cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
+        jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost
+    )
+    kappa0 = apps.w[:, :, None] * cp0[None, None, :]  # [A, 2, V]
+
+    L = apps.L
+    dist_from_src = dist[apps.src, :]
+    dist_to_dst = dist[:, apps.dst].T
+
+    if colocate:
+        S = (
+            L[:, 0][:, None] * dist_from_src
+            + kappa0[:, 0, :]
+            + kappa0[:, 1, :]
+            + L[:, 2][:, None] * dist_to_dst
+        )
+        h1 = jnp.argmin(S, axis=-1).astype(jnp.int32)
+        h2 = h1
+    else:
+        S_pair = (
+            L[:, 0][:, None, None] * dist_from_src[:, :, None]
+            + kappa0[:, 0, :, None]
+            + L[:, 1][:, None, None] * dist[None, :, :]
+            + kappa0[:, 1, None, :]
+            + L[:, 2][:, None, None] * dist_to_dst[:, None, :]
+        )
+        flat = jnp.argmin(S_pair.reshape(S_pair.shape[0], -1), axis=-1)
+        h1 = (flat // n).astype(jnp.int32)
+        h2 = (flat % n).astype(jnp.int32)
+
+    x = jnp.stack([one_hot(h1, n), one_hot(h2, n)], axis=1)
+
+    def per_app(h1a, h2a, dsta):
+        m0 = 1.0 - jax.nn.one_hot(h1a, n, dtype=jnp.float32)
+        m1 = 1.0 - jax.nn.one_hot(h2a, n, dtype=jnp.float32)
+        m2 = 1.0 - jax.nn.one_hot(dsta, n, dtype=jnp.float32)
+        return jnp.stack(
+            [
+                _old_sp_tree_phi(nexthop, h1a, m0, n),
+                _old_sp_tree_phi(nexthop, h2a, m1, n),
+                _old_sp_tree_phi(nexthop, dsta, m2, n),
+            ],
+            axis=0,
+        )
+
+    phi = jax.vmap(per_app)(h1, h2, apps.dst)
+    phi = phi * app_live_mask(apps)[:, None, None, None]
+    return State(x=x, phi=phi)
+
+
+def oracle_alt(problem, *, m_max, t_phi, alpha, tol, patience, colocate=False):
+    """The pre-refactor Algorithm-1 loop over the pre-refactor primitives:
+    the end-to-end parity oracle for the stage-generic stack."""
+    state = old_structured_init(problem, colocate=colocate)
+    J, aux = old_round_eval(problem, state)
+    best_J, best_aux = float(J), aux
+    history = [float(J)]
+    iters = 0
+    stall = 0
+    for m in range(m_max):
+        state = old_placement_update(problem, state, aux["ctg"], colocate=colocate)
+        state = old_forwarding_update(problem, state, t_phi=t_phi, alpha=alpha)
+        J, aux = old_round_eval(problem, state)
+        jf = float(J)
+        history.append(jf)
+        iters = m + 1
+        if jf < best_J * (1.0 - tol):
+            stall = 0
+        else:
+            stall += 1
+        if jf < best_J:
+            best_J, best_aux = jf, aux
+        if stall >= patience:
+            break
+    return {
+        "J": best_J,
+        "J_comm": float(best_aux["J_comm"]),
+        "J_comp": float(best_aux["J_comp"]),
+        "history": history,
+        "iters": iters,
+    }
+
+
+# ---------------------------------------------------------------------------
+# P = 2 parity: stage-generic primitives == pre-refactor unrolled code
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(SCENARIOS))
+class TestPrimitiveParity:
+    def test_structured_init_bitwise(self, name):
+        p = SCENARIOS[name]()
+        s_new = structured_init(p)
+        s_old = old_structured_init(p)
+        np.testing.assert_array_equal(np.asarray(s_new.x), np.asarray(s_old.x))
+        np.testing.assert_array_equal(np.asarray(s_new.phi), np.asarray(s_old.phi))
+
+    def test_traffic_and_cost_to_go(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        t_new = stage_traffic(p, s)
+        t_old = old_stage_traffic(p, s)
+        np.testing.assert_allclose(
+            np.asarray(t_new), np.asarray(t_old), rtol=1e-6, atol=1e-6
+        )
+        # q tolerates jit-vs-eager fusion differences (the oracle chain is
+        # unjitted); the refactor's own budget is the 1e-5 parity bar.
+        q_new = cost_to_go(p, s)[0]
+        q_old = old_cost_to_go(p, s)[0]
+        np.testing.assert_allclose(
+            np.asarray(q_new), np.asarray(q_old), rtol=1e-5, atol=1e-5
+        )
+
+    def test_forwarding_mass(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        np.testing.assert_array_equal(
+            np.asarray(forwarding_mass(s, p.apps, p.net.n_nodes)),
+            np.asarray(old_forwarding_mass(s, p.apps, p.net.n_nodes)),
+        )
+
+    def test_placement_sweep_hosts(self, name):
+        p = SCENARIOS[name]()
+        s = structured_init(p)
+        s = old_forwarding_update(p, s, t_phi=4)
+        s_new = placement_update(p, s)
+        s_old = old_placement_update(p, s)
+        np.testing.assert_array_equal(
+            np.asarray(s_new.hosts()), np.asarray(s_old.hosts())
+        )
+        np.testing.assert_allclose(
+            np.asarray(s_new.phi), np.asarray(s_old.phi), rtol=1e-6, atol=1e-6
+        )
+
+
+# ---------------------------------------------------------------------------
+# P = 2 parity: solve_alt / solve_fleet == the pre-refactor oracle loop
+# ---------------------------------------------------------------------------
+class TestEndToEndParity:
+    @pytest.mark.parametrize("name", list(SCENARIOS))
+    def test_solve_alt_matches_oracle(self, name):
+        p = SCENARIOS[name]()
+        ref = oracle_alt(p, **KW)
+        got = solve_alt(p, **KW)
+        np.testing.assert_allclose(got.J, ref["J"], rtol=1e-5)
+        np.testing.assert_allclose(got.J_comm, ref["J_comm"], rtol=1e-5)
+        np.testing.assert_allclose(got.J_comp, ref["J_comp"], rtol=1e-5)
+        assert got.iters == ref["iters"]
+        np.testing.assert_allclose(got.history, ref["history"], rtol=1e-5)
+
+    @pytest.mark.parametrize("name", ["iot", "geant"])
+    def test_solve_colocated_matches_oracle(self, name):
+        p = SCENARIOS[name]()
+        ref = oracle_alt(p, colocate=True, **KW)
+        got = solve_colocated(p, **KW)
+        np.testing.assert_allclose(got.J, ref["J"], rtol=1e-5)
+        assert got.iters == ref["iters"]
+
+    def test_solve_fleet_matches_oracle(self, name=None):
+        """One padded batch over all four topologies vs the per-instance
+        pre-refactor loop: the (V, A) padding must not cost the rtol-1e-5
+        budget either."""
+        fleet = [make() for make in SCENARIOS.values()]
+        res = solve_fleet(fleet, **KW)
+        for b, p in enumerate(fleet):
+            ref = oracle_alt(p, **KW)
+            np.testing.assert_allclose(res.J[b], ref["J"], rtol=1e-5)
+            assert int(res.iters[b]) == ref["iters"]
+
+
+# ---------------------------------------------------------------------------
+# Phantom-stage inertness (DESIGN.md section 9 extended to the stage axis)
+# ---------------------------------------------------------------------------
+class TestPhantomStageInertness:
+    def _assert_inert(self, p, k_env):
+        """Padding a problem to K = k_env stages is bitwise-inert."""
+        pp = pad_problem_parts(p, k_env - 1)
+        assert pp.apps.n_stages == k_env
+
+        s0 = structured_init(p)
+        s1 = structured_init(pp)
+        n_parts = p.apps.n_parts
+        # placements of the real partitions: bitwise
+        np.testing.assert_array_equal(
+            np.asarray(s1.hosts())[:, :n_parts], np.asarray(s0.hosts())
+        )
+        # real-stage traffic bitwise, phantom stages exactly zero
+        k_real = p.apps.n_stages
+        t0, t1 = np.asarray(stage_traffic(p, s0)), np.asarray(stage_traffic(pp, s1))
+        np.testing.assert_array_equal(t1[:, :k_real], t0)
+        assert float(np.abs(t1[:, k_real:]).max(initial=0.0)) == 0.0
+
+        r0 = solve_alt(p, m_max=4, t_phi=3)
+        r1 = solve_alt(pp, m_max=4, t_phi=3)
+        assert r0.J == r1.J  # bitwise
+        assert r0.iters == r1.iters
+        np.testing.assert_array_equal(r0.history, r1.history)
+        np.testing.assert_array_equal(
+            np.asarray(r1.state.hosts())[:, :n_parts],
+            np.asarray(r0.state.hosts()),
+        )
+        # conservation still holds on the padded chain
+        ab = total_absorbed(pp, r1.state)
+        np.testing.assert_allclose(
+            np.asarray(ab), np.asarray(pp.apps.lam), rtol=1e-3
+        )
+
+    def test_paper_iot_padded_to_k5(self):
+        """The ISSUE acceptance anchor: P=2 padded to K=5."""
+        self._assert_inert(iot(), 5)
+
+    @given(
+        seed=st.integers(0, 10_000),
+        k_env=st.integers(4, 6),
+        base_parts=st.integers(1, 3),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_property_padding_bitwise_inert(self, seed, k_env, base_parts):
+        p = erdos_renyi(12, 5, seed=seed, n_parts=base_parts)
+        self._assert_inert(p, max(k_env, base_parts + 2))
+
+
+# ---------------------------------------------------------------------------
+# P = 3 end-to-end + mixed-P fleets (acceptance criteria)
+# ---------------------------------------------------------------------------
+class TestDeepSplits:
+    def test_p3_iot_tree_end_to_end(self):
+        """A P = 3 IoT-tree scenario through solve_fleet(shard=True):
+        conservation + monotone best-iterate J. On a single-device run the
+        mesh plan falls back explicitly (reason='single-device'); the
+        multidevice CI job runs this same path truly sharded."""
+        fleet = [iot_hierarchy(seed=s, n_apps=6, n_parts=3) for s in range(4)]
+        assert all(p.apps.n_parts == 3 for p in fleet)
+        res = solve_fleet(fleet, method="ALT", m_max=6, t_phi=4, shard=True)
+        assert res.shard.requested
+        assert np.all(np.isfinite(res.J))
+        # monotone best-iterate: the returned J never exceeds any history row
+        hist = res.history
+        assert np.all(res.J <= np.nanmin(hist, axis=1) * (1 + 1e-6))
+        # conservation on the final state of each instance, re-solved at B=1
+        for p in fleet:
+            r = solve_alt(p, m_max=6, t_phi=4)
+            ab = total_absorbed(p, r.state)
+            np.testing.assert_allclose(
+                np.asarray(ab), np.asarray(p.apps.lam), rtol=1e-3
+            )
+
+    def test_mixed_p_fleet_single_padded_batch(self):
+        """P in {1, 2, 3} solves as ONE compiled padded batch and matches the
+        per-instance sequential path."""
+        fleet = sample_fleet(6, seed=11, partitions=(1, 2, 3))
+        assert sorted({p.apps.n_parts for p in fleet}) == [1, 2, 3]
+        res = solve_fleet(fleet, m_max=4, t_phi=4)
+        # one batch: everything padded to the max split depth's envelope
+        assert res.hosts.shape[-1] == 3
+        seq = solve_sequential(fleet, m_max=4, t_phi=4)
+        for b, r in enumerate(seq):
+            np.testing.assert_allclose(res.J[b], r.J, rtol=1e-3)
+        rows = res.per_instance()
+        assert [r["partitions"] for r in rows] == [1, 2, 3, 1, 2, 3]
+        for row, p in zip(rows, fleet):
+            assert all(len(h) == p.apps.n_parts for h in row["hosts"])
+
+    def test_per_app_heterogeneous_parts(self):
+        """`Apps.parts` is per-app: one problem may mix split depths."""
+        import dataclasses
+
+        p = iot(n_parts=3)
+        parts = np.full(p.apps.n_apps, 3, np.int32)
+        parts[::2] = 2  # every other app splits only twice
+        apps = dataclasses.replace(p.apps, parts=jnp.asarray(parts))
+        p = dataclasses.replace(p, apps=apps)
+        s = structured_init(p)
+        ab = total_absorbed(p, s)
+        np.testing.assert_allclose(
+            np.asarray(ab), np.asarray(p.apps.lam), rtol=1e-3
+        )
+        r = solve_alt(p, m_max=3, t_phi=3)
+        assert np.isfinite(r.J)
+        ab = total_absorbed(p, r.state)
+        np.testing.assert_allclose(
+            np.asarray(ab), np.asarray(p.apps.lam), rtol=1e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# K-sweep smoke: P = 1..4 x all four methods (the CI regression gate)
+# ---------------------------------------------------------------------------
+class TestKSweep:
+    @pytest.mark.parametrize("n_parts", [1, 2, 3, 4])
+    def test_all_methods_all_depths(self, n_parts):
+        fleet = [
+            iot_hierarchy(seed=0, n_edge=3, devices_per_edge=2, n_apps=4,
+                          n_parts=n_parts),
+            erdos_renyi(10, 4, seed=1, n_parts=n_parts),
+        ]
+        for method in METHODS:
+            res = solve_fleet(fleet, method=method, m_max=2, t_phi=3)
+            assert np.all(np.isfinite(res.J)), (method, n_parts)
+            assert np.all(res.J > 0), (method, n_parts)
+        # ALT at B=1 keeps conservation at every depth
+        r = solve_alt(fleet[0], m_max=2, t_phi=3)
+        ab = total_absorbed(fleet[0], r.state)
+        np.testing.assert_allclose(
+            np.asarray(ab), np.asarray(fleet[0].apps.lam), rtol=1e-3
+        )
+
+    def test_mixed_depth_smoke(self):
+        fleet = sample_fleet(4, seed=2, partitions=(1, 2, 3, 4))
+        res = solve_fleet(fleet, m_max=2, t_phi=3)
+        assert np.all(np.isfinite(res.J))
+        assert res.hosts.shape[-1] == 4
