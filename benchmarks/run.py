@@ -16,8 +16,17 @@ trajectory.
 committed baseline JSON for the same scale tier and exits nonzero on a
 >`--trend-tol` (default 20%) regression of any per-round timing (lower is
 better) or speedup/ratio metric (higher is better). `--trend-metrics ratios`
-restricts the check to machine-portable speedups/ratios — what CI uses,
-since raw per-round milliseconds are only comparable on similar hardware.
+restricts the check to machine-portable metrics — what CI uses, since raw
+per-round milliseconds are only comparable on similar hardware. Portable
+metrics are the speedups/ratios plus the solver-telemetry counts
+(`rounds_executed`, `pad_overhead`): more rounds to hit the same tolerance
+is a convergence regression no matter the machine.
+
+Observability (DESIGN.md section 14): each bench runs inside a host span
+and with a cleared metrics registry; whatever the instrumented solvers
+record lands in the bench result under "metrics", so the committed BENCH
+files carry telemetry alongside timings. REPRO_TRACE=path.jsonl records
+the span trace across the whole run.
 """
 from __future__ import annotations
 
@@ -40,6 +49,8 @@ from benchmarks import (
     scale_control_plane,
     table1_topologies,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 # Every benchmarks/*.py module (except this harness) is registered here, so
 # --only accepts each by name and the table is the complete inventory.
@@ -99,12 +110,19 @@ def write_json(name: str, payload, elapsed_s: float) -> pathlib.Path:
 # Trend lint: fresh timings vs the committed BENCH_<name>.json baseline
 # ---------------------------------------------------------------------------
 def trend_metrics(result, prefix: str = "") -> dict:
-    """Extract comparable metric leaves: {dotted.path: (value, direction)}.
+    """Extract comparable leaves: {dotted.path: (value, direction, portable)}.
 
     direction "lower" — per-round / per-op timings (path contains
     "per_round", or the key is a microsecond/millisecond reading); raw
-    end-to-end seconds are deliberately excluded as too noisy.
-    direction "higher" — speedups and ratios, which are machine-portable.
+    end-to-end seconds are deliberately excluded as too noisy. Also the
+    solver-telemetry counts (`rounds_executed`, `pad_overhead`): more
+    rounds — or more inert pad lanes — at the same tolerance is a
+    convergence/layout regression.
+    direction "higher" — speedups and ratios.
+
+    portable=True marks metrics comparable across machines (speedups,
+    ratios, and the telemetry counts — round counts don't depend on the
+    hardware clock); --trend-metrics ratios keeps only those.
     """
     out = {}
     if isinstance(result, dict):
@@ -116,9 +134,11 @@ def trend_metrics(result, prefix: str = "") -> dict:
     path = prefix.rstrip(".")
     key = path.rsplit(".", 1)[-1]
     if "speedup" in key or "ratio" in key:
-        out[path] = (float(result), "higher")
+        out[path] = (float(result), "higher", True)
+    elif "rounds_executed" in key or "pad_overhead" in key:
+        out[path] = (float(result), "lower", True)
     elif "per_round" in path or key.endswith(("_ms", "_us")):
-        out[path] = (float(result), "lower")
+        out[path] = (float(result), "lower", False)
     return out
 
 
@@ -131,17 +151,20 @@ def check_trend(
     base = trend_metrics(baseline_record.get("result", {}))
     new = trend_metrics(fresh)
     regressions = []
-    for path, (b_val, direction) in sorted(base.items()):
+    for path, (b_val, direction, portable) in sorted(base.items()):
         if path not in new:
             continue
-        if ratios_only and direction != "higher":
+        if ratios_only and not portable:
             continue
-        n_val, _ = new[path]
+        n_val = new[path][0]
         if direction == "lower":
-            bad = n_val > b_val * (1.0 + tol)
+            # Zero-baseline counts (e.g. pad overhead 0.0) can't regress by
+            # ratio; any increase from exactly zero is flagged.
+            bad = n_val > 0 if b_val == 0 else n_val > b_val * (1.0 + tol)
         else:
             bad = n_val < b_val * (1.0 - tol)
-        arrow = f"{b_val:.4g} -> {n_val:.4g} ({(n_val / b_val - 1) * 100:+.0f}%)"
+        pct = "" if b_val == 0 else f" ({(n_val / b_val - 1) * 100:+.0f}%)"
+        arrow = f"{b_val:.4g} -> {n_val:.4g}{pct}"
         status = "REGRESSION" if bad else "ok"
         print(f"trend,{name} {path}: {arrow} [{status}]", flush=True)
         if bad:
@@ -177,6 +200,7 @@ def main() -> int:
         "use in CI where absolute timings are not comparable)",
     )
     args = ap.parse_args()
+    obs_trace.maybe_configure_from_env()
     names = list(BENCHES) if not args.only else args.only.split(",")
     failures = []
     regressions = []
@@ -188,7 +212,15 @@ def main() -> int:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
         try:
-            result = BENCHES[name]()
+            # Per-bench metrics isolation: whatever the instrumented solvers
+            # record during THIS bench rides on its result (and baseline).
+            obs_metrics.registry.reset()
+            with obs_trace.span("bench", bench=name):
+                result = BENCHES[name]()
+            if isinstance(result, dict):
+                snap = obs_metrics.registry.snapshot()
+                if snap:
+                    result["metrics"] = snap
             elapsed = time.time() - t0
             if args.check_trend and result is not None:
                 if baseline is None:

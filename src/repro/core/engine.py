@@ -17,6 +17,16 @@ trace is written into a preallocated `[B, m_max + 1]` history buffer via a
 dynamic column update; unwritten slots stay NaN (the same "NaN past the
 freeze point" contract the fleet result has always exposed).
 
+The same mechanism carries the optional round trace (`EngineTrace`,
+DESIGN.md section 14): per-round J_comm/J_comp split, placement churn
+(live (app, partition) hosts that moved), a live/applied mask, and the
+best-iterate round index — all written by the identical masked dynamic
+column update, so they obey the exact NaN-past-freeze contract, add no
+host syncs inside the loop, and stay bitwise-inert on frozen lanes.
+`trace=False` removes the buffers entirely; the solved result is
+bitwise-identical either way (the trace is written FROM the round's
+values, never read by it).
+
 Batch semantics (DESIGN.md section 11):
   * the whole round body is vmapped over the leading instance axis, so a
     stacked fleet and a single `[1, ...]`-stacked problem run the exact same
@@ -43,7 +53,12 @@ import jax.numpy as jnp
 from .forwarding import forwarding_update
 from .marginals import round_eval
 from .placement import placement_update, structured_init
-from .structs import Problem, State
+from .structs import (
+    Problem,
+    State,
+    app_live_mask,
+    partition_live_mask,
+)
 
 
 def _bwhere(pred, a, b):
@@ -61,6 +76,52 @@ def _objective_of(aux):
     [A, K, V, V]-sized ctg tensors, which would double the loop-carry
     footprint for nothing."""
     return {"J": aux["J"], "J_comm": aux["J_comm"], "J_comp": aux["J_comp"]}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineTrace:
+    """On-device round-trace buffers (obs layer 1, DESIGN.md section 14).
+
+    Every `[B, m_max + 1]` buffer follows the J-history contract: column m
+    is written by the masked dynamic update of round m and keeps its init
+    value (NaN, or 0.0 for `live`) wherever the round was not applied —
+    past an instance's freeze point a masked write stores exactly the init
+    value, so frozen lanes stay bitwise-independent of later trips.
+
+    J_comm     : [B, m_max + 1] communication objective per applied round
+    J_comp     : [B, m_max + 1] computation objective per applied round
+    moves      : [B, m_max + 1] placement churn — live (app, partition)
+                 hosts that changed this round; column 0 is 0.0 (the init
+                 has no previous placement)
+    live       : [B, m_max + 1] 1.0 iff the round was applied to the
+                 instance; the other buffers' NaN mask in arithmetic form
+                 (host side derives per-round frozen-instance counts from it)
+    best_round : [B] int32 round index of the running best iterate
+    """
+
+    J_comm: jax.Array
+    J_comp: jax.Array
+    moves: jax.Array
+    live: jax.Array
+    best_round: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    EngineTrace,
+    data_fields=["J_comm", "J_comp", "moves", "live", "best_round"],
+    meta_fields=[],
+)
+
+
+def placement_churn(problem: Problem, new: State, old: State) -> jax.Array:
+    """[B] count of live (app, partition) hosts that differ between two
+    batched states — phantom apps (lambda = 0) and phantom partitions
+    (p >= parts) are masked out so stage/app padding cannot leak churn."""
+    live = (
+        partition_live_mask(problem.apps)
+        * app_live_mask(problem.apps)[..., None]
+    )  # [B, A, P]
+    return jnp.sum((new.hosts() != old.hosts()) * live, axis=(-2, -1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +144,8 @@ class EngineCarry:
                  laid out over a fleet mesh axis
     m          : scalar int32 trip counter (= rounds the while_loop ran)
     history    : [B, m_max + 1] objective trace; NaN past each freeze point
+    trace      : `EngineTrace` round-trace buffers, or None when tracing
+                 is off (the slot vanishes from the pytree entirely)
     """
 
     state: State
@@ -96,13 +159,14 @@ class EngineCarry:
     any_active: jax.Array
     m: jax.Array
     history: jax.Array
+    trace: EngineTrace | None
 
 
 jax.tree_util.register_dataclass(
     EngineCarry,
     data_fields=[
         "state", "aux", "best_state", "best_obj", "best_J", "stall",
-        "iters", "active", "any_active", "m", "history",
+        "iters", "active", "any_active", "m", "history", "trace",
     ],
     meta_fields=[],
 )
@@ -147,7 +211,31 @@ def round_step(
 
     # Freeze masking: instances that already stalled keep every slot.
     active = carry.active
-    history = carry.history.at[:, carry.m + 1].set(jnp.where(active, J, jnp.nan))
+    col = carry.m + 1
+    history = carry.history.at[:, col].set(jnp.where(active, J, jnp.nan))
+    trace = carry.trace
+    if trace is not None:
+        # Same masked dynamic-column writes as the history: inactive lanes
+        # store exactly the buffer's init value (NaN / 0.0), so the trace
+        # inherits the freeze-point contract bit for bit. Everything here is
+        # computed from values the round already produced — no extra solves,
+        # no host syncs, and the main dataflow never reads a trace buffer.
+        moved = placement_churn(problem, nxt, carry.state)
+        trace = EngineTrace(
+            J_comm=trace.J_comm.at[:, col].set(
+                jnp.where(active, aux_nxt["J_comm"], jnp.nan)
+            ),
+            J_comp=trace.J_comp.at[:, col].set(
+                jnp.where(active, aux_nxt["J_comp"], jnp.nan)
+            ),
+            moves=trace.moves.at[:, col].set(
+                jnp.where(active, moved.astype(trace.moves.dtype), jnp.nan)
+            ),
+            live=trace.live.at[:, col].set(active.astype(trace.live.dtype)),
+            best_round=jnp.where(
+                active & is_best, col.astype(jnp.int32), trace.best_round
+            ),
+        )
     active_nxt = active & (stall_nxt < patience)
     return EngineCarry(
         state=_bwhere(active, nxt, carry.state),
@@ -163,6 +251,7 @@ def round_step(
         any_active=jnp.any(active_nxt),
         m=carry.m + 1,
         history=history,
+        trace=trace,
     )
 
 
@@ -170,7 +259,7 @@ def round_step(
     jax.jit,
     static_argnames=(
         "m_max", "t_phi", "alpha", "tol", "patience", "colocate",
-        "track_best", "use_pallas", "solver",
+        "track_best", "use_pallas", "solver", "trace",
     ),
 )
 def engine_solve(
@@ -185,6 +274,7 @@ def engine_solve(
     track_best: bool = True,
     use_pallas: bool = False,
     solver: str = "neumann",
+    trace: bool = True,
 ) -> dict:
     """Run the alternating method on a stacked `[B, ...]` problem pytree.
 
@@ -198,6 +288,9 @@ def engine_solve(
       iters               : [B] int32 rounds applied per instance
       rounds              : scalar int32 while_loop trips actually executed
                             (< m_max whenever the whole batch froze early)
+      trace               : `EngineTrace` round-trace buffers (None when
+                            `trace=False`); every other output is
+                            bitwise-identical across the two settings
     """
 
     def init_one(p):
@@ -208,6 +301,16 @@ def engine_solve(
     state0, J0, aux0 = jax.vmap(init_one)(stacked)
     batch = J0.shape[0]
     history0 = jnp.full((batch, m_max + 1), jnp.nan, dtype=J0.dtype)
+    trace0 = None
+    if trace:
+        nan_buf = jnp.full((batch, m_max + 1), jnp.nan, dtype=J0.dtype)
+        trace0 = EngineTrace(
+            J_comm=nan_buf.at[:, 0].set(aux0["J_comm"]),
+            J_comp=nan_buf.at[:, 0].set(aux0["J_comp"]),
+            moves=nan_buf.at[:, 0].set(0.0),
+            live=jnp.zeros((batch, m_max + 1), J0.dtype).at[:, 0].set(1.0),
+            best_round=jnp.zeros(batch, jnp.int32),
+        )
     carry = EngineCarry(
         state=state0,
         aux=aux0,
@@ -220,6 +323,7 @@ def engine_solve(
         any_active=jnp.bool_(True),
         m=jnp.int32(0),
         history=history0.at[:, 0].set(J0),
+        trace=trace0,
     )
     step = functools.partial(
         round_step,
@@ -248,6 +352,7 @@ def engine_solve(
         "history": carry.history,
         "iters": carry.iters,
         "rounds": carry.m,
+        "trace": carry.trace,
     }
 
 

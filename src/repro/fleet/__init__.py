@@ -19,6 +19,7 @@ from .pad import (  # noqa: F401
     stack_problems,
     unify_hop_bound,
 )
+from ..obs.roundtrace import FleetTrace  # noqa: F401
 from .solve import (  # noqa: F401
     METHODS,
     FleetResult,

@@ -35,6 +35,14 @@ Scaling hooks (DESIGN.md sections 9-12):
     phi-shaped `[B, A, K, V, V]` buffers by auto-capping the chunk size for
     the (V, A) tier at hand — `chunk_size` alone caps B globally but not
     the per-device envelope, which is what blows up first at V >= 512.
+
+Observability (DESIGN.md section 14): `trace=True` (default) carries the
+engine's on-device round trace through the gather as `FleetResult.trace`
+(per-round J split, placement churn, live mask, best-round index — same
+NaN-past-freeze contract as `history`); the host-side stack/commit/execute/
+gather boundaries are bracketed by `obs.trace` spans, and per-solve
+telemetry (chunks, pad overhead, rounds vs budget, warm/cold compiles)
+lands in `obs.metrics.registry`.
 """
 from __future__ import annotations
 
@@ -52,6 +60,9 @@ from ..core.flow import objective
 from ..core.placement import structured_init
 from ..core.structs import Problem
 from ..distributed.sharding import carries_fleet_sharding, shard_fleet
+from ..obs.metrics import registry as obs_registry
+from ..obs.roundtrace import FleetTrace
+from ..obs.trace import span, tracer_enabled
 from .pad import (
     fleet_envelope,
     fleet_part_envelope,
@@ -70,6 +81,13 @@ logger = logging.getLogger("repro.fleet")
 # XLA temporaries. Deliberately conservative: the cap is a guard rail, not
 # an allocator.
 _PHI_COPIES = 8
+
+# Process-local approximation of XLA's compile cache, keyed on what actually
+# decides the compiled program: padded shapes, hop bound, device count, and
+# the static solve kwargs. Drives the fleet.compile.{cold,warm} counters; it
+# can undercount colds after `jax.clear_caches()` (we never see that), which
+# the metrics consumers accept as the cost of staying sync-free.
+_COMPILE_CACHE_KEYS: set = set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +123,13 @@ class ShardPlan:
     def sharded(self) -> bool:
         return self.n_devices > 1
 
+    def describe(self) -> str:
+        """One-liner for summaries/CLIs: devices, lane padding, reason."""
+        return (
+            f"{self.n_devices}dev B={self.batch}->{self.padded_batch} "
+            f"{self.reason}"
+        )
+
 
 @dataclasses.dataclass
 class FleetResult:
@@ -123,6 +148,12 @@ class FleetResult:
                           partitions past these are padding)
     node_mask/app_mask  : [B, V] / [B, A] validity masks from padding
     shard               : the instance-axis layout decision (`ShardPlan`)
+    m_max               : the effective round budget this solve ran under
+                          (0 for CongUnaware, 1 for OneShot) — lets
+                          `summary()` report "rounds executed vs budget"
+    trace               : host-side `FleetTrace` of the engine's on-device
+                          round diagnostics (None when trace=False or for
+                          the zero-iteration CongUnaware baseline)
     """
 
     method: str
@@ -139,6 +170,8 @@ class FleetResult:
     shard: ShardPlan = dataclasses.field(
         default_factory=lambda: ShardPlan(requested=False)
     )
+    m_max: int = 0
+    trace: FleetTrace | None = None
 
     @property
     def n_instances(self) -> int:
@@ -182,14 +215,19 @@ class FleetResult:
         return out
 
     def summary(self) -> str:
-        layout = (
-            f"  shard={self.shard.n_devices}dev" if self.shard.sharded else ""
+        rounds = f"rounds={self.rounds}"
+        if self.m_max:
+            tag = " early-exit" if self.rounds < self.m_max else ""
+            rounds = f"rounds={self.rounds}/{self.m_max}{tag}"
+        churn = (
+            f"  churn={self.trace.mean_churn():.2f}/round"
+            if self.trace is not None else ""
         )
         return (
             f"fleet[{self.method}] B={self.n_instances} "
             f"J: min={self.J.min():.3f} med={np.median(self.J):.3f} "
             f"max={self.J.max():.3f}  iters: {self.iters.min()}-{self.iters.max()}"
-            f"  rounds={self.rounds}{layout}"
+            f"  {rounds}{churn}  shard[{self.shard.describe()}]"
         )
 
 
@@ -227,6 +265,7 @@ def _solve_fleet_stacked(
     patience: int,
     use_pallas: bool,
     solver: str,
+    trace: bool = True,
 ) -> dict:
     """Dispatch one stacked batch onto the shared round engine."""
     if method == "CongUnaware":
@@ -234,6 +273,7 @@ def _solve_fleet_stacked(
             _solve_fleet_congunaware(stacked, use_pallas=use_pallas, solver=solver)
         )
         out["rounds"] = jnp.int32(0)
+        out["trace"] = None
         return out
     out = dict(
         engine_solve(
@@ -247,6 +287,7 @@ def _solve_fleet_stacked(
             track_best=method != "OneShot",
             use_pallas=use_pallas,
             solver=solver,
+            trace=trace,
         )
     )
     # Drop the full [B, A, K, V, V] State: the fleet result only surfaces
@@ -299,13 +340,32 @@ def _run_chunk(
         target = -(-target // n_dev) * n_dev
     if target > real:
         problems = list(problems) + [problems[0]] * (target - real)
-    stacked, info = stack_problems(
-        problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound,
-        n_parts=n_parts,
-    )
+    with span("solve_fleet.stack", batch=target, real=real):
+        stacked, info = stack_problems(
+            problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound,
+            n_parts=n_parts,
+        )
     if mesh is not None:
-        stacked, info = shard_fleet((stacked, info), mesh)
-    out = _solve_fleet_stacked(stacked, **solve_kw)
+        with span("solve_fleet.commit", devices=int(mesh.devices.size)):
+            stacked, info = shard_fleet((stacked, info), mesh)
+    key = (
+        stacked.net.adj.shape,
+        stacked.apps.L.shape,
+        stacked.hop_bound,
+        1 if mesh is None else int(mesh.devices.size),
+        tuple(sorted(solve_kw.items())),
+    )
+    cold = key not in _COMPILE_CACHE_KEYS
+    _COMPILE_CACHE_KEYS.add(key)
+    obs_registry.counter(
+        "fleet.compile.cold" if cold else "fleet.compile.warm"
+    ).inc()
+    with span("solve_fleet.execute", batch=target, cold_compile=cold):
+        out = _solve_fleet_stacked(stacked, **solve_kw)
+        if tracer_enabled():
+            # Only when tracing: make the span cover the device work, not
+            # just the dispatch. Untraced solves keep async dispatch.
+            jax.block_until_ready(out["J"])
     out["parts"] = stacked.apps.parts
     sharded_out = mesh is not None and carries_fleet_sharding(out["J"])
     if mesh is not None and not sharded_out:
@@ -354,6 +414,7 @@ def solve_fleet(
     solver: str = "neumann",
     chunk_size: int | None = None,
     envelope_cap_gb: float | None = None,
+    trace: bool = True,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of problems as one batched computation.
 
@@ -380,12 +441,16 @@ def solve_fleet(
     envelope_cap_gb : bound the per-device footprint of the phi-shaped
                  [B, A, K, V, V] engine buffers by auto-capping the chunk
                  size for this fleet's (V, A) tier (see `envelope_cap_chunk`)
+    trace      : carry the engine's on-device round trace (J split, churn,
+                 live mask, best round) out as `FleetResult.trace`; False
+                 drops the buffers from the compiled loop entirely. Results
+                 are bitwise-identical either way.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     solve_kw = dict(
         method=method, m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol,
-        patience=patience, use_pallas=use_pallas, solver=solver,
+        patience=patience, use_pallas=use_pallas, solver=solver, trace=trace,
     )
     n = len(problems)
     mesh, n_dev, reason = _plan_mesh(shard, devices)
@@ -444,20 +509,47 @@ def solve_fleet(
             [np.asarray(getter(o, i))[:k] for (o, i, k, _, _) in outs]
         )
 
-    return FleetResult(
-        method=method,
-        J=gather(lambda o, i: o["J"]),
-        J_comm=gather(lambda o, i: o["J_comm"]),
-        J_comp=gather(lambda o, i: o["J_comp"]),
-        history=gather(lambda o, i: o["history"]),
-        iters=gather(lambda o, i: o["iters"]),
-        rounds=max(int(o["rounds"]) for (o, _, _, _, _) in outs),
-        hosts=gather(lambda o, i: o["hosts"]),
-        parts=gather(lambda o, i: o["parts"]),
-        node_mask=gather(lambda o, i: i.node_mask),
-        app_mask=gather(lambda o, i: i.app_mask),
-        shard=plan,
+    with span("solve_fleet.gather", chunks=len(outs)):
+        fleet_trace = None
+        if all(o.get("trace") is not None for (o, _, _, _, _) in outs):
+            fleet_trace = FleetTrace(
+                J_comm=gather(lambda o, i: o["trace"].J_comm),
+                J_comp=gather(lambda o, i: o["trace"].J_comp),
+                moves=gather(lambda o, i: o["trace"].moves),
+                live=gather(lambda o, i: o["trace"].live),
+                best_round=gather(lambda o, i: o["trace"].best_round),
+            )
+        result = FleetResult(
+            method=method,
+            J=gather(lambda o, i: o["J"]),
+            J_comm=gather(lambda o, i: o["J_comm"]),
+            J_comp=gather(lambda o, i: o["J_comp"]),
+            history=gather(lambda o, i: o["history"]),
+            iters=gather(lambda o, i: o["iters"]),
+            rounds=max(int(o["rounds"]) for (o, _, _, _, _) in outs),
+            hosts=gather(lambda o, i: o["hosts"]),
+            parts=gather(lambda o, i: o["parts"]),
+            node_mask=gather(lambda o, i: i.node_mask),
+            app_mask=gather(lambda o, i: i.app_mask),
+            shard=plan,
+            m_max=(
+                0 if method == "CongUnaware"
+                else 1 if method == "OneShot" else m_max
+            ),
+            trace=fleet_trace,
+        )
+
+    obs_registry.counter("fleet.chunks_executed").inc(len(outs))
+    obs_registry.gauge("fleet.rounds_executed").set(result.rounds)
+    obs_registry.gauge("fleet.m_max").set(result.m_max)
+    obs_registry.gauge("fleet.early_exit_saved_rounds").set(
+        max(0, result.m_max - result.rounds)
     )
+    obs_registry.gauge("fleet.pad_overhead_fraction").set(
+        0.0 if plan.padded_batch == 0
+        else (plan.padded_batch - plan.batch) / plan.padded_batch
+    )
+    return result
 
 
 def solve_sequential(problems, *, method: str = "ALT", **kw) -> list:

@@ -11,6 +11,11 @@ Examples (CPU):
   PYTHONPATH=src python -m repro.launch.fleet --scenario iot --load-grid 0.4,0.8,1.2
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.fleet --instances 10 --shard
+
+Observability: `--trace-out spans.jsonl` (or REPRO_TRACE=spans.jsonl)
+records the host span trace — a Chrome trace_event twin lands next to it —
+and the emitted JSON carries a "metrics" snapshot plus the engine's
+round-trace summary under "trace" (DESIGN.md section 14).
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ import time
 
 from repro.core import SCENARIOS
 from repro.fleet import FAMILIES, load_grid, sample_fleet, solve_fleet
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 def main(argv=None) -> int:
@@ -92,39 +99,58 @@ def main(argv=None) -> int:
         help="split fleets larger than this into fixed-B chunks sharing one "
         "compiled (V, A, B) program",
     )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        help="write the host span trace to this JSONL path (a Chrome "
+        "trace_event file lands next to it); REPRO_TRACE=path does the same",
+    )
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs_trace.configure(
+            enabled=True,
+            jsonl_path=args.trace_out,
+            chrome_path=obs_trace.chrome_path_for(args.trace_out),
+        )
+    else:
+        obs_trace.maybe_configure_from_env()
 
     partitions = (
         [int(x) for x in args.partitions.split(",")] if args.partitions else None
     )
-    if args.scenario:
-        scales = (
-            [float(s) for s in args.load_grid.split(",")]
-            if args.load_grid
-            else [1.0] * args.instances
-        )
-        grid_kw = {"n_parts": partitions[0]} if partitions else {}
-        fleet = load_grid(SCENARIOS[args.scenario], scales, **grid_kw)
-    else:
-        families = args.families.split(",") if args.families else None
-        fleet = sample_fleet(
-            args.instances, families=families, seed=args.seed,
-            partitions=partitions,
-        )
+    with obs_trace.span("launch.fleet.build", instances=args.instances):
+        if args.scenario:
+            scales = (
+                [float(s) for s in args.load_grid.split(",")]
+                if args.load_grid
+                else [1.0] * args.instances
+            )
+            grid_kw = {"n_parts": partitions[0]} if partitions else {}
+            fleet = load_grid(SCENARIOS[args.scenario], scales, **grid_kw)
+        else:
+            families = args.families.split(",") if args.families else None
+            fleet = sample_fleet(
+                args.instances, families=families, seed=args.seed,
+                partitions=partitions,
+            )
 
     t0 = time.time()
-    res = solve_fleet(
-        fleet,
-        method=args.method,
-        m_max=args.m_max,
-        t_phi=args.t_phi,
-        round_to=args.round_to,
-        shard=args.shard,
-        devices=args.devices,
-        solver=args.solver,
-        chunk_size=args.chunk_size,
-        envelope_cap_gb=args.envelope_cap_gb,
-    )
+    with obs_trace.span(
+        "launch.fleet.solve", method=args.method, instances=len(fleet)
+    ):
+        res = solve_fleet(
+            fleet,
+            method=args.method,
+            m_max=args.m_max,
+            t_phi=args.t_phi,
+            round_to=args.round_to,
+            shard=args.shard,
+            devices=args.devices,
+            solver=args.solver,
+            chunk_size=args.chunk_size,
+            envelope_cap_gb=args.envelope_cap_gb,
+        )
     dt = time.time() - t0
     print(
         json.dumps(
@@ -147,12 +173,17 @@ def main(argv=None) -> int:
                 # how many inert pad lanes were run and trimmed
                 "shard": dataclasses.asdict(res.shard),
                 "summary": res.summary(),
+                # obs layer 3: the process-local metrics this solve produced
+                "metrics": obs_metrics.registry.snapshot(),
+                # obs layer 1: host summary of the engine's round trace
+                "trace": None if res.trace is None else res.trace.to_dict(),
                 "per_instance": res.per_instance(),
             },
             indent=1,
         ),
         flush=True,
     )
+    obs_trace.flush()
     return 0
 
 

@@ -10,6 +10,12 @@ nodes; this module is the per-node execution engine.
 CPU smoke:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --requests 12 --batch-slots 4 --prompt-len 32 --max-new 16
+
+The JSON summary carries serving SLO telemetry through the obs metrics
+registry (DESIGN.md section 14): p50/p95 end-to-end latency, p50/p95
+time-to-first-token, and decode throughput, plus the raw registry snapshot
+under "metrics". REPRO_TRACE=path additionally records host spans around
+the prefill/decode loop.
 """
 from __future__ import annotations
 
@@ -25,6 +31,8 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.models import decode_step, init_caches, init_params, prefill
 from repro.launch.steps import serve_config
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -36,6 +44,9 @@ class Request:
     started: float | None = None
     tokens: list | None = None
     finished: float | None = None
+    # Wall time the first generated token landed (set once; survives the
+    # re-prefill hack because dataclasses.replace copies it).
+    first_token: float | None = None
 
 
 def main(argv=None):
@@ -49,6 +60,9 @@ def main(argv=None):
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    obs_trace.maybe_configure_from_env()
+    registry = obs_metrics.registry
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     cfg = serve_config(cfg)
@@ -110,43 +124,64 @@ def main(argv=None):
                 for i in range(b)
             ]
         )
-        new_caches, logits = jit_prefill(params, {"tokens": jnp.asarray(prompts)})
+        with obs_trace.span("serve.prefill", admitted=len(batchful)):
+            new_caches, logits = jit_prefill(
+                params, {"tokens": jnp.asarray(prompts)}
+            )
         caches = new_caches
         nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1)).astype(np.int32)
         cur_tokens = nxt[:, None]
         pos = args.prompt_len
 
-    admit()
-    while any(r is not None for r in active) or queue:
-        logits, caches = jit_decode(
-            params, caches, jnp.asarray(cur_tokens), jnp.int32(pos)
-        )
-        decode_steps += 1
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1)).astype(np.int32)
-        pos += 1
-        finished_any = False
-        for i, r in enumerate(active):
-            if r is None:
-                continue
-            r.tokens.append(int(nxt[i]))
-            if len(r.tokens) >= r.max_new or pos >= args.max_seq - 1:
-                r.finished = time.time()
-                done.append(r)
-                active[i] = None
-                finished_any = True
-        cur_tokens = nxt[:, None]
-        if finished_any and queue:
-            # Simplification: re-prefill the whole batch when slots free up
-            # (a real engine would use paged attention to splice requests).
+    with obs_trace.span("serve.run", requests=args.requests, slots=b):
+        admit()
+        while any(r is not None for r in active) or queue:
+            logits, caches = jit_decode(
+                params, caches, jnp.asarray(cur_tokens), jnp.int32(pos)
+            )
+            decode_steps += 1
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1)).astype(np.int32)
+            pos += 1
+            finished_any = False
             for i, r in enumerate(active):
-                if r is not None:
-                    queue.insert(0, dataclasses.replace(r))
+                if r is None:
+                    continue
+                r.tokens.append(int(nxt[i]))
+                if r.first_token is None:
+                    r.first_token = time.time()
+                if len(r.tokens) >= r.max_new or pos >= args.max_seq - 1:
+                    r.finished = time.time()
+                    done.append(r)
                     active[i] = None
-            admit()
+                    finished_any = True
+            cur_tokens = nxt[:, None]
+            if finished_any and queue:
+                # Simplification: re-prefill the whole batch when slots free
+                # up (a real engine would use paged attention to splice
+                # requests).
+                for i, r in enumerate(active):
+                    if r is not None:
+                        queue.insert(0, dataclasses.replace(r))
+                        active[i] = None
+                admit()
 
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in done)
-    lat = [r.finished - r.arrived for r in done]
+
+    # Serving SLOs through the obs registry (layer 3): the percentiles the
+    # JSON reports are computed FROM the histogram snapshot, so the CLI and
+    # any metrics consumer can never disagree.
+    lat_hist = registry.histogram("serve.latency_s")
+    ttft_hist = registry.histogram("serve.ttft_s")
+    for r in done:
+        lat_hist.observe(r.finished - r.arrived)
+        if r.first_token is not None:
+            ttft_hist.observe(r.first_token - r.arrived)
+    registry.counter("serve.requests").inc(len(done))
+    decode_tps = total_tokens / dt
+    registry.gauge("serve.decode_tokens_per_s").set(decode_tps)
+    lat_snap = lat_hist.snapshot()
+    ttft_snap = ttft_hist.snapshot()
     print(
         json.dumps(
             {
@@ -154,12 +189,25 @@ def main(argv=None):
                 "decode_steps": decode_steps,
                 "generated_tokens": total_tokens,
                 "tokens_per_s": round(total_tokens / dt, 2),
-                "mean_latency_s": round(float(np.mean(lat)), 3),
-                "p95_latency_s": round(float(np.percentile(lat, 95)), 3),
+                "decode_tokens_per_s": round(decode_tps, 2),
+                "mean_latency_s": round(lat_snap["mean"], 3),
+                "p50_latency_s": round(lat_snap["p50"], 3),
+                "p95_latency_s": round(lat_snap["p95"], 3),
+                "p50_ttft_s": round(ttft_snap["p50"], 3),
+                "p95_ttft_s": round(ttft_snap["p95"], 3),
+                "metrics": {
+                    k: (
+                        {kk: round(vv, 4) for kk, vv in v.items()}
+                        if isinstance(v, dict)
+                        else round(v, 4) if isinstance(v, float) else v
+                    )
+                    for k, v in registry.snapshot().items()
+                },
             }
         ),
         flush=True,
     )
+    obs_trace.flush()
     return 0
 
 
