@@ -47,6 +47,7 @@ from benchmarks import (
     kernel_bench,
     roofline,
     scale_control_plane,
+    serve_bench,
     table1_topologies,
 )
 from repro.obs import metrics as obs_metrics
@@ -62,6 +63,7 @@ BENCHES = {
     "kernels": kernel_bench.run,       # Pallas kernels vs oracles
     "scale": scale_control_plane.run,  # beyond-paper: fleet-scale control
     "fleet": fleet_bench.run,          # batched-vs-sequential + solver axis
+    "serve": serve_bench.run,          # chaos control loop (epochs/sec, p95)
     "roofline": roofline.run,          # informational; needs dry-run artifacts
 }
 
@@ -224,9 +226,16 @@ def main() -> int:
             elapsed = time.time() - t0
             if args.check_trend and result is not None:
                 if baseline is None:
+                    # First run of a new bench (e.g. BENCH_serve.json before
+                    # it ever landed): warn AND record the fresh result as
+                    # the baseline, so the next run has something to lint
+                    # against instead of KeyError-ing or silently skipping
+                    # forever.
+                    path = write_json(name, result, time.time() - t0)
                     print(
                         f"trend,{name} no committed baseline for tier "
-                        f"'{_scale_tier()}' — skipping",
+                        f"'{_scale_tier()}' — recorded "
+                        f"{path.relative_to(REPO_ROOT)} as the new baseline",
                         flush=True,
                     )
                 else:

@@ -1,0 +1,76 @@
+"""Serving control-plane benchmark: the fault-injection epoch loop at
+steady state, persisted as BENCH_serve.json (ROADMAP "online control
+plane" item; DESIGN.md section 15).
+
+Where fleet_bench's chaos section asserts the warm-start efficiency claim
+(with a per-epoch solve-from-scratch comparison), this bench measures what
+production cares about: sustained epochs/sec over a mixed sampled fleet
+under continuous chaos, recovery-latency percentiles (wall time from fault
+to accepted placement), and the degradation-ladder fallback rate. Every
+epoch must end servable: feasible_fraction == 1.0 and zero non-finite J
+are hard assertions, not metrics.
+
+`warm_rounds_executed` is trend-linted (machine-portable, lower is
+better): warm event-epochs needing more engine rounds to re-converge at
+the same tolerance is a convergence regression no matter the hardware.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.chaos import generate_trace
+from repro.fleet import sample_fleet
+from repro.launch.control import run_control
+
+_SMALL = bool(os.environ.get("SCALE_SMALL"))
+
+
+def run(print_fn=print) -> dict:
+    epochs = 12 if _SMALL else 50
+    instances = 4 if _SMALL else 8
+    n_fail, n_deg, n_crowd = (3, 2, 1) if _SMALL else (5, 3, 1)
+    fleet = sample_fleet(
+        instances, families=["iot_hierarchy"], seed=2030
+    )
+    trace = generate_trace(
+        fleet, epochs, seed=2031, node_failures=n_fail,
+        link_degradations=n_deg, flash_crowds=n_crowd,
+    )
+    t0 = time.time()
+    ctl = run_control(
+        fleet, trace=trace, m_max=20, t_phi=5, round_to=8,
+    )
+    wall = time.time() - t0
+    s = ctl.summary()
+    assert s["feasible_fraction"] == 1.0, (
+        f"serve: {s['infeasible_epochs']} infeasible epochs"
+    )
+    assert s["nonfinite_epochs"] == 0, (
+        f"serve: {s['nonfinite_epochs']} epochs with non-finite J"
+    )
+    print_fn(
+        f"serve,control B={instances} epochs={epochs} "
+        f"{s['epochs_per_s']:.2f} epochs/s "
+        f"p95-recovery={s['p95_recovery_latency_s'] * 1e3:.0f}ms "
+        f"fallback={s['fallback_rate']:.0%} feasible=100% "
+        f"warm-rounds={s['warm_rounds_executed']:.1f} wall={wall:.1f}s"
+    )
+    return {
+        "instances": instances,
+        "epochs": epochs,
+        "epochs_per_s": s["epochs_per_s"],
+        "p50_recovery_latency_s": s["p50_recovery_latency_s"],
+        "p95_recovery_latency_s": s["p95_recovery_latency_s"],
+        "fallback_rate": s["fallback_rate"],
+        "fallback_epochs": s["fallback_epochs"],
+        "feasible_fraction": s["feasible_fraction"],
+        "nonfinite_epochs": s["nonfinite_epochs"],
+        "warm_epochs": s["warm_epochs"],
+        "warm_rounds_executed": s["warm_rounds_executed"],
+        "event_counts": s["events"],
+    }
+
+
+if __name__ == "__main__":
+    run()

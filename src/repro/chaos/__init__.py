@@ -1,0 +1,24 @@
+"""Fault injection for the control plane: seeded chaos over fleet problems.
+
+events.py  — fault-trace generation (node churn, link degradation, flash
+             crowds) and application to `Problem`s via the pad encoding
+repair.py  — fleet-level placement repair after faults (vmapped eviction)
+
+See DESIGN.md section 15 and launch/control.py for the epoch controller
+that drives trace -> repair -> warm re-solve.
+"""
+from .events import (  # noqa: F401
+    EVENT_KINDS,
+    FLASH_CROWD,
+    FLASH_END,
+    LINK_DEGRADE,
+    LINK_RESTORE,
+    NODE_DOWN,
+    NODE_UP,
+    FaultEvent,
+    FaultTrace,
+    InstanceHealth,
+    apply_health,
+    generate_trace,
+)
+from .repair import repair_fleet  # noqa: F401

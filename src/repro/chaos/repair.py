@@ -1,0 +1,70 @@
+"""Fleet-level failure repair: one vmapped `repair_placement` per epoch.
+
+Bridges the per-instance repair primitive (core/placement.py) to the fleet
+envelope the controller actually carries: the perturbed problems are padded
+and stacked exactly like `solve_fleet` would stack them, the per-instance
+live masks are extended with zeros over the pad tail (padded nodes ARE dead
+nodes under the shared encoding), and `repair_placement` runs vmapped over
+the instance axis. The result is a stacked `State` ready to hand to
+`solve_fleet(warm_start=...)`.
+
+Identity contract (inherited from `repair_placement`): with every mask
+all-ones the returned State is bitwise the input — the empty-fault-trace
+stability the tests pin.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.placement import repair_placement
+from ..core.structs import State
+from ..fleet.pad import stack_problems
+
+
+def repair_fleet(
+    problems,
+    state: State,
+    live_masks,
+    *,
+    round_to: int = 1,
+    envelope=None,
+    hop_bound=None,
+    n_parts=None,
+    use_pallas: bool = False,
+) -> State:
+    """Evict every dead-hosted partition across a fleet in one vmapped call.
+
+    problems   : the PERTURBED problems (dead nodes already pad-encoded)
+    state      : stacked [B, ...] State over the fleet envelope — typically
+                 `FleetResult.state` from the previous epoch's
+                 `solve_fleet(..., keep_state=True)`
+    live_masks : per-instance [V_i] masks from `chaos.apply_health`
+                 (1.0 = live); shorter than the envelope is fine, the pad
+                 tail is dead by definition
+    round_to / envelope / hop_bound / n_parts : must match what the solves
+                 use, so the stacked envelope — and therefore the state
+                 shape — agrees epoch over epoch
+    """
+    stacked, _ = stack_problems(
+        problems, round_to=round_to, envelope=envelope, hop_bound=hop_bound,
+        n_parts=n_parts,
+    )
+    b = len(problems)
+    v_env = int(stacked.net.adj.shape[-1])
+    exp = (b,) + tuple(stacked.apps.w.shape[1:]) + (v_env,)
+    if tuple(state.x.shape) != exp:
+        raise ValueError(
+            f"repair_fleet: state placement shape {tuple(state.x.shape)} "
+            f"does not match the fleet envelope {exp} — the envelope "
+            "drifted since the state was produced; re-solve cold"
+        )
+    masks = np.zeros((b, v_env), np.float32)
+    for i, m in enumerate(live_masks):
+        m = np.asarray(m, dtype=np.float32)
+        masks[i, : m.size] = m
+    fn = functools.partial(repair_placement, use_pallas=use_pallas)
+    return jax.vmap(fn)(stacked, state, jnp.asarray(masks))

@@ -182,30 +182,142 @@ def placement_update(
 
 @jax.jit
 def repair_phi(
-    problem: Problem, old: State, new: State, nexthop: jax.Array
+    problem: Problem,
+    old: State,
+    new: State,
+    nexthop: jax.Array,
+    force: jax.Array | None = None,
 ) -> State:
     """Rebuild phi for stages whose absorption target moved (see module doc).
 
     Generic over the stage axis: stage k targets the partition-(k+1) host
     for k < parts and the destination after that (`structs.stage_targets`),
     so the final stage — and every phantom stage — never triggers a rebuild,
-    and phantom stages keep zero mass via `stage_live_mask`."""
+    and phantom stages keep zero mass via `stage_live_mask`.
+
+    `force` is an optional [A, K] bool mask requesting a rebuild even when
+    the target did not move — the failure-repair path (`repair_placement`)
+    uses it for stages whose refined multipath phi carries mass into a node
+    that just died, which a target-only comparison cannot see."""
     n = problem.net.n_nodes
     apps = problem.apps
     old_t = stage_targets(apps, old.hosts())  # [A, K]
     new_t = stage_targets(apps, new.hosts())  # [A, K]
     live = stage_live_mask(apps)  # [A, K]
+    if force is None:
+        force = jnp.zeros(old_t.shape, bool)
 
-    def per_stage(phi_k, ot, nt, lv):
+    def per_stage(phi_k, ot, nt, lv, fc):
         m = (1.0 - jax.nn.one_hot(nt, n, dtype=jnp.float32)) * lv
         tree = _sp_tree_phi(nexthop, nt, m, n)
-        return jnp.where(ot != nt, tree, phi_k)
+        return jnp.where((ot != nt) | fc, tree, phi_k)
 
-    phi = jax.vmap(jax.vmap(per_stage, in_axes=(0, 0, 0, 0)))(
-        new.phi, old_t, new_t, live
+    phi = jax.vmap(jax.vmap(per_stage, in_axes=(0, 0, 0, 0, 0)))(
+        new.phi, old_t, new_t, live, force
     )
     phi = phi * app_live_mask(apps)[:, None, None, None]
     return State(x=new.x, phi=phi)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def repair_placement(
+    problem: Problem,
+    state: State,
+    node_mask: jax.Array,
+    *,
+    use_pallas: bool = False,
+) -> State:
+    """Evict partitions from masked-out hosts to the best live node.
+
+    The failure-repair primitive (DESIGN.md section 15): `node_mask` is a
+    [V] validity mask (1.0 = live) over a problem whose dead nodes already
+    carry the pad encoding (adj = 0, mu = BIG, nu = NU_PAD — see
+    chaos/events.py). Partitions hosted on dead nodes are rescored under
+    the ZERO-LOAD marginals — the same metric as `structured_init`, because
+    the post-fault congestion pattern is unknown until the next solve — and
+    moved to the argmin live host, walking the partition chain in order so
+    partition p sees the repaired host of p-1 (footnote-5 semantics, as in
+    `placement_update`). Partitions on live hosts do not move: repair is a
+    minimal eviction, not a re-optimization — the warm-started engine does
+    the re-optimization afterwards.
+
+    phi is then repaired by `repair_phi`, with a `force` rebuild for every
+    stage whose current multipath phi carries mass INTO a dead node: once
+    the node's links are BIG-rate, traffic routed there would otherwise be
+    costed as if those links were free (zero incident traffic => zero D
+    contribution), silently hiding an unservable route.
+
+    Identity contract: with node_mask all-ones this returns `state`
+    bitwise — no host is dead so no eviction happens, `one_hot(argmax(x))`
+    round-trips the one-hot x exactly, and no stage is force-rebuilt.
+    """
+    n = problem.net.n_nodes
+    apps = problem.apps
+    n_parts = apps.n_parts
+    from . import costs as _costs
+    from .structs import BIG
+
+    # Zero-load marginal link metric on the surviving subgraph. Dead nodes
+    # keep adj = 0, so the `adj > 0` gate prices every edge into (or out of)
+    # them at BIG and the SP trees route around the failure automatically.
+    dp0 = problem.cost.w_comm * _costs.link_cost_prime(
+        jnp.zeros_like(problem.net.mu), problem.net.mu, problem.cost
+    )
+    dp0 = jnp.where(problem.net.adj > 0, dp0, BIG)
+    dist, nexthop = apsp_with_nexthop(dp0, use_pallas=use_pallas)
+
+    cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
+        jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost
+    )
+    # Hard eviction barrier: a dead candidate host scores BIG on top of its
+    # already-prohibitive 1/NU_PAD compute marginal (belt and braces — the
+    # braces matter when w_a,p is tiny).
+    node_pen = jnp.where(node_mask > 0, 0.0, BIG)
+
+    hosts = state.hosts()  # [A, P]
+    p_idx = jnp.arange(n_parts)
+
+    def per_app(src_a, dst_a, h_old, L_a, w_a, parts_a):
+        live = p_idx < parts_a  # [P]
+        dead_host = node_mask[h_old] <= 0  # [P]
+        # Old downstream anchor: partition p+1's current host, or the
+        # destination for the last live partition (and phantoms).
+        down = jnp.where(
+            p_idx + 1 < parts_a,
+            jnp.concatenate([h_old[1:], dst_a[None]]),
+            dst_a,
+        )  # [P]
+
+        def step(up, pin):
+            live_p, h_old_p, down_p, L_up, L_dn, w_p, dead_p = pin
+            S = (
+                L_up * dist[up, :]
+                + w_p * cp0
+                + L_dn * dist[:, down_p]
+                + node_pen
+            )
+            h = jnp.where(
+                live_p & dead_p, jnp.argmin(S).astype(jnp.int32), h_old_p
+            )
+            return jnp.where(live_p, h, up), h
+
+        _, h_new = jax.lax.scan(
+            step,
+            src_a,
+            (live, h_old, down, L_a[:-1], L_a[1:], w_a, dead_host),
+        )
+        return h_new
+
+    hosts_new = jax.vmap(per_app)(
+        apps.src, apps.dst, hosts, apps.L, apps.w, apps.parts
+    )
+
+    # Stages whose refined phi still pushes mass into a dead node must be
+    # rebuilt even if their absorption target did not move (docstring).
+    dead = (node_mask <= 0).astype(state.phi.dtype)  # [V]
+    force = jnp.einsum("akuv,v->ak", state.phi, dead) > 0  # [A, K]
+    new_state = State(x=one_hot(hosts_new, n), phi=state.phi)
+    return repair_phi(problem, state, new_state, nexthop, force)
 
 
 @functools.partial(jax.jit, static_argnames=("colocate", "use_pallas"))

@@ -8,6 +8,7 @@ the paper's four fixed topologies. See DESIGN.md section 9.
 """
 from .pad import (  # noqa: F401
     NU_PAD,
+    EmptyFleetError,
     PadInfo,
     fleet_envelope,
     fleet_part_envelope,

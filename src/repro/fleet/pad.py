@@ -51,6 +51,17 @@ from ..core.structs import Apps, BIG, Network, Problem
 NU_PAD = 1e-9
 
 
+class EmptyFleetError(ValueError):
+    """A fleet operation was handed zero solvable instances.
+
+    Raised by `pad_batch_to_multiple` / `stack_problems` when the batch is
+    empty — either literally (zero instances) or effectively (every node of
+    every instance is dead, so there is nothing inert to repeat the padding
+    from). A typed subclass so control planes can catch "nothing to solve"
+    distinctly from genuine argument errors; the old behavior was an opaque
+    reshape/stack failure deep inside jnp."""
+
+
 @dataclasses.dataclass(frozen=True)
 class PadInfo:
     """Validity masks for one padded instance (or a stacked fleet of them).
@@ -203,9 +214,19 @@ def pad_batch_to_multiple(problems, multiple: int) -> tuple[list, int]:
     to the engine (e.g. tests driving `engine_solve` on a committed mesh)."""
     if multiple < 1:
         raise ValueError(f"multiple must be >= 1, got {multiple}")
+    problems = list(problems)
     n = len(problems)
     if n == 0:
-        raise ValueError("empty fleet")
+        raise EmptyFleetError(
+            "pad_batch_to_multiple: empty fleet — there is no first instance "
+            "to repeat the pad lanes from"
+        )
+    if all(float(jnp.max(p.net.nu)) <= NU_PAD for p in problems):
+        raise EmptyFleetError(
+            "pad_batch_to_multiple: every node of every instance is dead "
+            f"(nu <= NU_PAD = {NU_PAD:g}); an all-dead fleet has no live "
+            "host set to solve over"
+        )
     target = -(-n // multiple) * multiple
     return list(problems) + [problems[0]] * (target - n), n
 
@@ -231,7 +252,7 @@ def stack_problems(
     same program.
     """
     if not problems:
-        raise ValueError("empty fleet")
+        raise EmptyFleetError("stack_problems: empty fleet")
     kinds = {p.cost.kind for p in problems}
     if len(kinds) > 1:
         raise ValueError(

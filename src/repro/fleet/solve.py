@@ -58,12 +58,13 @@ from ..core.alt import ALL_METHODS, linearize, method_kwargs
 from ..core.engine import engine_solve
 from ..core.flow import objective
 from ..core.placement import structured_init
-from ..core.structs import Problem
+from ..core.structs import Problem, State
 from ..distributed.sharding import carries_fleet_sharding, shard_fleet
 from ..obs.metrics import registry as obs_registry
 from ..obs.roundtrace import FleetTrace
 from ..obs.trace import span, tracer_enabled
 from .pad import (
+    NU_PAD,
     fleet_envelope,
     fleet_part_envelope,
     stack_problems,
@@ -88,6 +89,69 @@ _PHI_COPIES = 8
 # can undercount colds after `jax.clear_caches()` (we never see that), which
 # the metrics consumers accept as the cost of staying sync-free.
 _COMPILE_CACHE_KEYS: set = set()
+
+
+def _validate_problems(problems) -> None:
+    """Reject inputs that would push NaN/inf through the fixed point.
+
+    The quadratic cost extension keeps J *finite* past rho_max, but a
+    non-finite rate or capacity anywhere poisons every downstream reduction
+    silently — by the time the caller sees J = NaN the provenance is gone.
+    Checks are host-side numpy over the raw (unpadded) instances, so error
+    messages can name the instance/app/stage; `solve_fleet(validate=False)`
+    skips them for hot inner loops that re-solve already-validated fleets.
+
+    A node with nu <= NU_PAD is DEAD under the §9/§15 encoding (padding and
+    chaos both use it), so "the live-host set is empty" and "a live app's
+    endpoint is dead" are both input errors here, not solver NaNs later.
+    """
+    for i, p in enumerate(problems):
+        arrays = {
+            "adj": np.asarray(p.net.adj),
+            "mu": np.asarray(p.net.mu),
+            "nu": np.asarray(p.net.nu),
+            "lam": np.asarray(p.apps.lam),
+            "L": np.asarray(p.apps.L),
+            "w": np.asarray(p.apps.w),
+        }
+        for name, arr in arrays.items():
+            if not np.isfinite(arr).all():
+                raise ValueError(
+                    f"solve_fleet: instance {i}: non-finite values in "
+                    f"{name!r} — refusing to propagate NaN/inf through the "
+                    "traffic fixed point"
+                )
+        if (arrays["lam"] < 0).any():
+            raise ValueError(
+                f"solve_fleet: instance {i}: negative arrival rate lam"
+            )
+        if (arrays["mu"] <= 0).any():
+            raise ValueError(
+                f"solve_fleet: instance {i}: non-positive link rate mu"
+            )
+        if (arrays["nu"] <= 0).any():
+            raise ValueError(
+                f"solve_fleet: instance {i}: non-positive compute rate nu"
+            )
+        live = arrays["nu"] > NU_PAD
+        lam = arrays["lam"]
+        if not live.any():
+            a = int(np.argmax(lam > 0)) if (lam > 0).any() else 0
+            raise ValueError(
+                f"solve_fleet: instance {i}, app {a}, stage 0: live-host "
+                f"set is empty — all {live.size} nodes are dead "
+                f"(nu <= NU_PAD = {NU_PAD:g}), no node can host any stage"
+            )
+        src = np.asarray(p.apps.src)
+        dst = np.asarray(p.apps.dst)
+        for a in np.flatnonzero(lam > 0):
+            for role, node in (("src", int(src[a])), ("dst", int(dst[a]))):
+                if not live[node]:
+                    raise ValueError(
+                        f"solve_fleet: instance {i}, app {int(a)}: {role} "
+                        f"node {node} is dead — its traffic cannot be "
+                        + ("injected" if role == "src" else "absorbed")
+                    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +218,12 @@ class FleetResult:
     trace               : host-side `FleetTrace` of the engine's on-device
                           round diagnostics (None when trace=False or for
                           the zero-iteration CongUnaware baseline)
+    state               : the solved stacked `State` over the fleet envelope
+                          (device arrays, pad lanes trimmed) when the caller
+                          passed `keep_state=True`; the warm-start currency
+                          — feed it back as `solve_fleet(warm_start=...)`
+                          next epoch. None by default: the [B, A, K, V, V]
+                          phi buffers are too big to keep alive casually.
     """
 
     method: str
@@ -172,6 +242,7 @@ class FleetResult:
     )
     m_max: int = 0
     trace: FleetTrace | None = None
+    state: State | None = None
 
     @property
     def n_instances(self) -> int:
@@ -266,6 +337,9 @@ def _solve_fleet_stacked(
     use_pallas: bool,
     solver: str,
     trace: bool = True,
+    keep_state: bool = False,
+    init_state: State | None = None,
+    active0=None,
 ) -> dict:
     """Dispatch one stacked batch onto the shared round engine."""
     if method == "CongUnaware":
@@ -288,12 +362,15 @@ def _solve_fleet_stacked(
             use_pallas=use_pallas,
             solver=solver,
             trace=trace,
+            init_state=init_state,
+            active0=active0,
         )
     )
-    # Drop the full [B, A, K, V, V] State: the fleet result only surfaces
-    # hosts, and a chunked solve would otherwise keep every chunk's phi
-    # buffers alive until the final gather.
-    out.pop("state")
+    if not keep_state:
+        # Drop the full [B, A, K, V, V] State: the fleet result only
+        # surfaces hosts, and a chunked solve would otherwise keep every
+        # chunk's phi buffers alive until the final gather.
+        out.pop("state")
     return out
 
 
@@ -324,7 +401,7 @@ def _plan_mesh(shard: bool, devices: int | None):
 
 def _run_chunk(
     problems, *, envelope, hop_bound, n_parts, round_to, mesh, batch_to,
-    solve_kw,
+    solve_kw, warm=None,
 ):
     """Stack (and, when sharding, pad + commit) one chunk and solve it.
 
@@ -332,7 +409,12 @@ def _run_chunk(
         chunked path passes `chunk_size` so every chunk compiles to the same
         program); a fleet mesh additionally rounds the target up to a device
         multiple. Returns (engine_out, stacked_info, n_real, n_lanes,
-        outputs_sharded)."""
+        outputs_sharded).
+    warm : optional (State, active_mask_or_None) pair seeding the engine
+        carry — the State covers the `real` instances over the already-
+        padded fleet envelope; pad lanes repeat lane 0 with active=False so
+        a warm pad lane costs a single init eval, and a mesh commits the
+        warm arrays alongside the stacked problem."""
     real = len(problems)
     target = max(real, batch_to or 0)
     if mesh is not None:
@@ -348,11 +430,41 @@ def _run_chunk(
     if mesh is not None:
         with span("solve_fleet.commit", devices=int(mesh.devices.size)):
             stacked, info = shard_fleet((stacked, info), mesh)
+    init_state = active0 = None
+    if warm is not None:
+        w_state, w_active = warm
+        exp = (real,) + tuple(stacked.apps.w.shape[1:]) + (
+            int(stacked.net.adj.shape[-1]),
+        )
+        if tuple(w_state.x.shape) != exp:
+            raise ValueError(
+                f"solve_fleet: warm_start placement shape "
+                f"{tuple(w_state.x.shape)} does not match this fleet's "
+                f"stacked envelope {exp} — the (V, A, K) envelope drifted "
+                "since the state was produced; re-solve cold"
+            )
+        if target > real:
+            w_state = jax.tree_util.tree_map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[:1], target - real, axis=0)]
+                ),
+                w_state,
+            )
+        act = (
+            jnp.ones(real, bool)
+            if w_active is None
+            else jnp.asarray(np.asarray(w_active)).reshape(real).astype(bool)
+        )
+        act = jnp.concatenate([act, jnp.zeros(target - real, bool)])
+        if mesh is not None:
+            w_state, act = shard_fleet((w_state, act), mesh)
+        init_state, active0 = w_state, act
     key = (
         stacked.net.adj.shape,
         stacked.apps.L.shape,
         stacked.hop_bound,
         1 if mesh is None else int(mesh.devices.size),
+        init_state is not None,
         tuple(sorted(solve_kw.items())),
     )
     cold = key not in _COMPILE_CACHE_KEYS
@@ -361,7 +473,9 @@ def _run_chunk(
         "fleet.compile.cold" if cold else "fleet.compile.warm"
     ).inc()
     with span("solve_fleet.execute", batch=target, cold_compile=cold):
-        out = _solve_fleet_stacked(stacked, **solve_kw)
+        out = _solve_fleet_stacked(
+            stacked, init_state=init_state, active0=active0, **solve_kw
+        )
         if tracer_enabled():
             # Only when tracing: make the span cover the device work, not
             # just the dispatch. Untraced solves keep async dispatch.
@@ -415,6 +529,10 @@ def solve_fleet(
     chunk_size: int | None = None,
     envelope_cap_gb: float | None = None,
     trace: bool = True,
+    warm_start: State | None = None,
+    warm_active=None,
+    keep_state: bool = False,
+    validate: bool = True,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of problems as one batched computation.
 
@@ -445,12 +563,41 @@ def solve_fleet(
                  live mask, best round) out as `FleetResult.trace`; False
                  drops the buffers from the compiled loop entirely. Results
                  are bitwise-identical either way.
+    warm_start : a stacked `State` over this fleet's envelope — typically
+                 `FleetResult.state` from the previous control epoch, after
+                 `chaos.repair_fleet` — seeding the engine carry instead of
+                 `structured_init` (DESIGN.md section 15). Shape-checked
+                 against the stacked envelope (a drifted envelope raises).
+                 Single-chunk only: a warm fleet must fit one engine batch.
+    warm_active: optional [B] bool mask (requires warm_start); False lanes
+                 are frozen from round 0 and return exactly the warm state's
+                 evaluation — the "re-solve only the perturbed instances"
+                 mechanism. None = all lanes active.
+    keep_state : surface the solved stacked `State` as `FleetResult.state`
+                 (the warm-start currency for the next epoch). Unsupported
+                 for CongUnaware (its baseline never forms an engine state).
+    validate   : host-side input validation (`_validate_problems`): reject
+                 non-finite rates/capacities, dead src/dst endpoints and
+                 empty live-host sets with a named ValueError instead of
+                 letting NaN propagate through the fixed point.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    if validate:
+        _validate_problems(problems)
+    if warm_active is not None and warm_start is None:
+        raise ValueError("warm_active requires warm_start")
+    if warm_start is not None and method == "CongUnaware":
+        raise ValueError(
+            "warm_start is meaningless for CongUnaware (a zero-iteration "
+            "baseline that never runs the engine)"
+        )
+    if keep_state and method == "CongUnaware":
+        raise ValueError("keep_state is unsupported for CongUnaware")
     solve_kw = dict(
         method=method, m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol,
         patience=patience, use_pallas=use_pallas, solver=solver, trace=trace,
+        keep_state=keep_state,
     )
     n = len(problems)
     mesh, n_dev, reason = _plan_mesh(shard, devices)
@@ -473,11 +620,21 @@ def solve_fleet(
         # a device multiple and reuses one compiled, committed program.
         chunk_size = -(-chunk_size // n_dev) * n_dev
 
+    warm = None
+    if warm_start is not None:
+        if chunk_size is not None and n > chunk_size:
+            raise ValueError(
+                f"warm_start is single-chunk only: fleet of {n} instances "
+                f"would split into chunks of {chunk_size} — raise chunk_size/"
+                "envelope_cap_gb or re-solve cold"
+            )
+        warm = (warm_start, warm_active)
+
     chunk_kw = dict(round_to=round_to, mesh=mesh, solve_kw=solve_kw)
     if chunk_size is None or n <= chunk_size:
         outs = [
             _run_chunk(problems, envelope=None, hop_bound=None, n_parts=None,
-                       batch_to=None, **chunk_kw)
+                       batch_to=None, warm=warm, **chunk_kw)
         ]
     else:
         # One global envelope + hop bound + partition envelope so every
@@ -510,6 +667,21 @@ def solve_fleet(
         )
 
     with span("solve_fleet.gather", chunks=len(outs)):
+        kept_state = None
+        if keep_state:
+            # Trim pad lanes per chunk, then concatenate; stays on device —
+            # this is the next epoch's warm-start input, not a host export.
+            states = [
+                jax.tree_util.tree_map(lambda x, k=k: x[:k], o["state"])
+                for (o, _, k, _, _) in outs
+            ]
+            kept_state = (
+                states[0]
+                if len(states) == 1
+                else jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs), *states
+                )
+            )
         fleet_trace = None
         if all(o.get("trace") is not None for (o, _, _, _, _) in outs):
             fleet_trace = FleetTrace(
@@ -537,6 +709,7 @@ def solve_fleet(
                 else 1 if method == "OneShot" else m_max
             ),
             trace=fleet_trace,
+            state=kept_state,
         )
 
     obs_registry.counter("fleet.chunks_executed").inc(len(outs))
