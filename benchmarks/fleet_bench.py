@@ -68,6 +68,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._knobs import pallas_knobs
 from repro.core import SCENARIOS
 from repro.fleet import METHODS, sample_fleet, solve_fleet, solve_sequential
 from repro.fleet.generator import erdos_renyi, iot_hierarchy
@@ -87,7 +88,7 @@ SOLVER_REPS = 2 if _SMALL else 3
 def _bench_batched_vs_sequential(print_fn, solver: str) -> dict:
     fleet = sample_fleet(BATCH, seed=2026)
     shapes = {(p.net.n_nodes, p.apps.n_apps) for p in fleet}
-    kw = dict(solver=solver, **SOLVE_KW)
+    kw = dict(solver=solver, **SOLVE_KW, **pallas_knobs())
 
     # --- fresh-ensemble (cold) end-to-end, sequential then batched ---------
     jax.clear_caches()
@@ -185,14 +186,15 @@ def _bench_solver_axis(print_fn) -> dict:
     """Warm per-outer-round cost of the two fixed-point solvers at V >= 64."""
     fleet = [erdos_renyi(SOLVER_V, 12, seed=s) for s in range(SOLVER_BATCH)]
     rounds = SOLVER_KW["m_max"]
+    skw = dict(**SOLVER_KW, **pallas_knobs())
     per_round = {}
     J = {}
     for solver in ("neumann", "lu"):
-        solve_fleet(fleet, solver=solver, **SOLVER_KW)  # compile + warm
+        solve_fleet(fleet, solver=solver, **skw)  # compile + warm
         best = np.inf
         for _ in range(SOLVER_REPS):
             t0 = time.time()
-            res = solve_fleet(fleet, solver=solver, **SOLVER_KW)
+            res = solve_fleet(fleet, solver=solver, **skw)
             best = min(best, time.time() - t0)
         per_round[solver] = best / rounds
         J[solver] = np.asarray(res.J)
@@ -223,7 +225,7 @@ def _bench_solver_axis(print_fn) -> dict:
 def _bench_solver_parity(print_fn) -> dict:
     """Neumann-vs-LU objective parity: 4 methods x 4 paper topologies."""
     fleet = [make() for make in SCENARIOS.values()]
-    kw = dict(m_max=3 if _SMALL else 6, t_phi=5)
+    kw = dict(m_max=3 if _SMALL else 6, t_phi=5, **pallas_knobs())
     out = {}
     for method in METHODS:
         Js = {}
@@ -247,7 +249,7 @@ def _bench_partition_axis(print_fn) -> dict:
     batch (the ISSUE 5 tentpole's user-visible payoff)."""
     p_set = (1, 2, 3, 4)
     batch = 3 if _SMALL else 6
-    kw = dict(m_max=2 if _SMALL else 4, t_phi=4)
+    kw = dict(m_max=2 if _SMALL else 4, t_phi=4, **pallas_knobs())
 
     def depth_fleet(p):
         return [

@@ -1,18 +1,24 @@
 """Kernel micro-benchmarks: jnp oracle paths timed on CPU; Pallas kernels
 validated in interpret mode (wall-clock on CPU interpret is meaningless —
-the TPU perf argument lives in the roofline analysis)."""
+the TPU perf argument lives in the roofline analysis).
+
+`benchmarks.run --use-pallas [--no-interpret]` routes the apsp section (and
+the fleet benches) through the Pallas kernels instead — see _knobs.py."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._knobs import pallas_knobs
 from repro.kernels.flash_attention.ref import attention_chunked, attention_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.minplus.kernel import minplus_matmul_pallas
-from repro.kernels.minplus.ops import apsp
+from repro.kernels.minplus.ops import apsp, apsp_with_nexthop
+from repro.kernels.minplus.ref import apsp_ref
 from repro.kernels.neumann import lu_solve_ref, neumann_solve
 from repro.kernels.neumann.kernel import neumann_solve_pallas
 
@@ -26,17 +32,77 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6  # us
 
 
+def _bench_apsp(out, print_fn, knobs) -> None:
+    """APSP — the placement step's inner loop and PR 8's scaling cliff.
+
+    Default path vs the dense one-broadcast squaring (`apsp_ref`): the dense
+    path materializes a [V, V, V] candidate tensor per squaring, 512 MiB at
+    V=512 and 4 GiB at V=1024 — which is why V=1024 only runs the O(V^2)
+    paths, and why this section exists. `apsp_*_us` keys are trend-linted
+    (lower is better); the `_speedup` ratios are the portable claim.
+    """
+    small = bool(os.environ.get("SCALE_SMALL"))
+    rng = np.random.RandomState(0)
+    sizes = (32, 128, 256) if small else (32, 128, 512, 1024)
+    dense_cap = 256 if small else 512
+    for v in sizes:
+        w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
+        w[rng.rand(v, v) < 0.7] = 1e18
+        wj = jnp.asarray(w)
+        reps = 2 if v >= 512 else 5
+        us = _time(jax.jit(lambda x: apsp(x, **knobs)), wj, reps=reps)
+        out[f"apsp_v{v}_us"] = us
+        line = f"kernel,apsp v={v:4d}  {us:10.1f} us/call"
+        if v >= 128:
+            us_nh = _time(
+                jax.jit(lambda x: apsp_with_nexthop(x, **knobs)[1]),
+                wj,
+                reps=reps,
+            )
+            out[f"apsp_nexthop_v{v}_us"] = us_nh
+            line += f"  nexthop {us_nh:10.1f} us"
+        if 128 <= v <= dense_cap:
+            d0 = jnp.where(jnp.eye(v, dtype=bool), 0.0, wj)
+            us_dense = _time(jax.jit(apsp_ref), d0, reps=2)
+            out[f"apsp_dense_v{v}_us"] = us_dense
+            out[f"apsp_v{v}_speedup"] = us_dense / us
+            line += f"  dense {us_dense:10.1f} us ({us_dense / us:.1f}x)"
+        elif v > dense_cap:
+            line += "  dense skipped (O(V^3) broadcast)"
+        print_fn(line)
+
+
+def _bench_fleet_round(out, print_fn, knobs) -> None:
+    """End-to-end ALT round wall-clock across V — the ROADMAP success
+    metric behind PR 8: a V=1024 round on the O(V^2) APSP paths vs the
+    small-V rounds the dense path used to cap the stack at."""
+    from repro.core import random_connected, solve_alt
+
+    small = bool(os.environ.get("SCALE_SMALL"))
+    sizes = ((64, 3), (256, 4)) if small else ((256, 4), (1024, 4))
+    ms = {}
+    for v, a in sizes:
+        p = random_connected(v, a, seed=1)
+        kw = dict(m_max=1, t_phi=2, **knobs)
+        float(solve_alt(p, **kw).J)  # compile + warm
+        reps = 2
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            float(solve_alt(p, **kw).J)
+        ms[v] = (time.perf_counter() - t0) / reps * 1e3
+        out[f"fleet_round_v{v}_ms"] = ms[v]
+        print_fn(f"kernel,fleet_round v={v:4d}  {ms[v]:8.1f} ms/round")
+    lo, hi = min(ms), max(ms)
+    out["fleet_round_small_over_big_ratio"] = ms[lo] / ms[hi]
+
+
 def run(print_fn=print) -> dict:
     out = {}
     rng = np.random.RandomState(0)
+    knobs = pallas_knobs()
 
-    # APSP (jnp path) across graph sizes — the placement step's inner loop.
-    for v in (32, 128, 512):
-        w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
-        w[rng.rand(v, v) < 0.7] = 1e18
-        us = _time(jax.jit(apsp), jnp.asarray(w))
-        out[f"apsp_v{v}_us"] = us
-        print_fn(f"kernel,apsp v={v:4d}  {us:10.1f} us/call")
+    _bench_apsp(out, print_fn, knobs)
+    _bench_fleet_round(out, print_fn, knobs)
 
     # neumann propagation solve vs dense LU — the ALT hot-loop fixed point.
     # Workload shape: [A, V, V] nilpotent operators (SP-tree-like support,

@@ -201,7 +201,24 @@ def main() -> int:
         help="'ratios' compares only speedups/ratios (machine-portable; "
         "use in CI where absolute timings are not comparable)",
     )
+    ap.add_argument(
+        "--use-pallas",
+        action="store_true",
+        help="benchmark the Pallas kernel path instead of pure XLA (exported "
+        "to benches via REPRO_BENCH_USE_PALLAS; see benchmarks/_knobs.py)",
+    )
+    ap.add_argument(
+        "--interpret",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="with --use-pallas, run kernel bodies under the Pallas "
+        "interpreter (CPU validation). A real TPU/GPU benchmark run passes "
+        "--use-pallas --no-interpret; no effect without --use-pallas",
+    )
     args = ap.parse_args()
+    if args.use_pallas:
+        os.environ["REPRO_BENCH_USE_PALLAS"] = "1"
+        os.environ["REPRO_BENCH_INTERPRET"] = "1" if args.interpret else "0"
     obs_trace.maybe_configure_from_env()
     names = list(BENCHES) if not args.only else args.only.split(",")
     failures = []

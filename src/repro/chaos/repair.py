@@ -35,6 +35,7 @@ def repair_fleet(
     hop_bound=None,
     n_parts=None,
     use_pallas: bool = False,
+    interpret: bool = True,
 ) -> State:
     """Evict every dead-hosted partition across a fleet in one vmapped call.
 
@@ -66,5 +67,7 @@ def repair_fleet(
     for i, m in enumerate(live_masks):
         m = np.asarray(m, dtype=np.float32)
         masks[i, : m.size] = m
-    fn = functools.partial(repair_placement, use_pallas=use_pallas)
+    fn = functools.partial(
+        repair_placement, use_pallas=use_pallas, interpret=interpret
+    )
     return jax.vmap(fn)(stacked, state, jnp.asarray(masks))

@@ -9,11 +9,13 @@ from .structs import (  # noqa: F401
     BIG,
     BIG_THRESHOLD,
     CostModel,
+    HopBoundCache,
     Network,
     Problem,
     State,
     app_live_mask,
     forwarding_mass,
+    hop_bound_cache,
     infer_hop_bound,
     partition_live_mask,
     stage_live_mask,

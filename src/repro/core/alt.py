@@ -87,6 +87,7 @@ def solve_alt(
     patience: int = 4,
     colocate: bool = False,
     use_pallas: bool = False,
+    interpret: bool = True,
     solver: str = "neumann",
     name: str = "ALT",
 ) -> Result:
@@ -110,6 +111,7 @@ def solve_alt(
         colocate=colocate,
         track_best=True,
         use_pallas=use_pallas,
+        interpret=interpret,
         solver=solver,
     )
 
@@ -120,6 +122,7 @@ def solve_oneshot(
     t_phi: int = 10,
     alpha: float = 0.5,
     use_pallas: bool = False,
+    interpret: bool = True,
     solver: str = "neumann",
 ) -> Result:
     """One placement/forwarding round: isolates the value of alternation.
@@ -137,6 +140,7 @@ def solve_oneshot(
         colocate=False,
         track_best=False,
         use_pallas=use_pallas,
+        interpret=interpret,
         solver=solver,
     )
 
@@ -160,7 +164,11 @@ def linearize(problem: Problem) -> Problem:
 
 
 def solve_congunaware(
-    problem: Problem, *, use_pallas: bool = False, solver: str = "neumann"
+    problem: Problem,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    solver: str = "neumann",
 ) -> Result:
     """Shortest extended path under linear costs, evaluated with true costs.
 
@@ -170,8 +178,13 @@ def solve_congunaware(
     exactly to the structured initialization's stage DP under the linear
     cost model (any partition count — DESIGN.md section 13).
     """
-    state = structured_init(linearize(problem), use_pallas=use_pallas)
-    J, aux = objective(problem, state, solver=solver)
+    state = structured_init(
+        linearize(problem), use_pallas=use_pallas, interpret=interpret
+    )
+    J, aux = objective(
+        problem, state, solver=solver, use_pallas=use_pallas,
+        interpret=interpret,
+    )
     return _result(problem, state, aux, "CongUnaware", [], 0)
 
 
@@ -184,6 +197,7 @@ def solve_colocated(
     tol: float = 1e-3,
     patience: int = 4,
     use_pallas: bool = False,
+    interpret: bool = True,
     solver: str = "neumann",
 ) -> Result:
     """All partitions at a single node; forwarding still congestion-aware."""
@@ -196,6 +210,7 @@ def solve_colocated(
         patience=patience,
         colocate=True,
         use_pallas=use_pallas,
+        interpret=interpret,
         solver=solver,
         name="CoLocated",
     )
@@ -214,10 +229,16 @@ ALL_METHODS = {
 # per-method defaults (the pre-PR-3 bug: `m_max` was forwarded to CoLocated
 # but `tol`/`patience` were not).
 METHOD_KWARGS = {
-    "ALT": ("m_max", "t_phi", "alpha", "tol", "patience", "use_pallas", "solver"),
-    "OneShot": ("t_phi", "alpha", "use_pallas", "solver"),
-    "CongUnaware": ("use_pallas", "solver"),
-    "CoLocated": ("m_max", "t_phi", "alpha", "tol", "patience", "use_pallas", "solver"),
+    "ALT": (
+        "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
+        "interpret", "solver",
+    ),
+    "OneShot": ("t_phi", "alpha", "use_pallas", "interpret", "solver"),
+    "CongUnaware": ("use_pallas", "interpret", "solver"),
+    "CoLocated": (
+        "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
+        "interpret", "solver",
+    ),
 }
 
 

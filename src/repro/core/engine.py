@@ -183,6 +183,7 @@ def round_step(
     colocate: bool,
     use_pallas: bool,
     solver: str,
+    interpret: bool = True,
 ) -> EngineCarry:
     """One batched ALT round: Algorithm 1's loop body plus bookkeeping.
 
@@ -194,10 +195,16 @@ def round_step(
 
     def one_round(p, s, ctg):
         nxt = placement_update(
-            p, s, ctg, colocate=colocate, use_pallas=use_pallas, solver=solver
+            p, s, ctg, colocate=colocate, use_pallas=use_pallas,
+            interpret=interpret, solver=solver,
         )
-        nxt = forwarding_update(p, nxt, t_phi=t_phi, alpha=alpha, solver=solver)
-        J, aux_nxt = round_eval(p, nxt, solver=solver, use_pallas=use_pallas)
+        nxt = forwarding_update(
+            p, nxt, t_phi=t_phi, alpha=alpha, solver=solver,
+            use_pallas=use_pallas, interpret=interpret,
+        )
+        J, aux_nxt = round_eval(
+            p, nxt, solver=solver, use_pallas=use_pallas, interpret=interpret
+        )
         return nxt, J, aux_nxt
 
     nxt, J, aux_nxt = jax.vmap(one_round)(problem, carry.state, carry.aux["ctg"])
@@ -259,7 +266,7 @@ def round_step(
     jax.jit,
     static_argnames=(
         "m_max", "t_phi", "alpha", "tol", "patience", "colocate",
-        "track_best", "use_pallas", "solver", "trace",
+        "track_best", "use_pallas", "interpret", "solver", "trace",
     ),
 )
 def engine_solve(
@@ -273,6 +280,7 @@ def engine_solve(
     colocate: bool = False,
     track_best: bool = True,
     use_pallas: bool = False,
+    interpret: bool = True,
     solver: str = "neumann",
     trace: bool = True,
     init_state: State | None = None,
@@ -310,15 +318,21 @@ def engine_solve(
     if init_state is None:
 
         def init_one(p):
-            s = structured_init(p, colocate=colocate, use_pallas=use_pallas)
-            J, aux = round_eval(p, s, solver=solver, use_pallas=use_pallas)
+            s = structured_init(
+                p, colocate=colocate, use_pallas=use_pallas, interpret=interpret
+            )
+            J, aux = round_eval(
+                p, s, solver=solver, use_pallas=use_pallas, interpret=interpret
+            )
             return s, J, aux
 
         state0, J0, aux0 = jax.vmap(init_one)(stacked)
     else:
         state0 = init_state
         J0, aux0 = jax.vmap(
-            lambda p, s: round_eval(p, s, solver=solver, use_pallas=use_pallas)
+            lambda p, s: round_eval(
+                p, s, solver=solver, use_pallas=use_pallas, interpret=interpret
+            )
         )(stacked, state0)
     batch = J0.shape[0]
     history0 = jnp.full((batch, m_max + 1), jnp.nan, dtype=J0.dtype)
@@ -360,6 +374,7 @@ def engine_solve(
         colocate=colocate,
         use_pallas=use_pallas,
         solver=solver,
+        interpret=interpret,
     )
     carry = jax.lax.while_loop(
         lambda c: (c.m < m_max) & c.any_active, step, carry

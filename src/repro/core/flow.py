@@ -46,11 +46,16 @@ def stage_solve(
     transpose: bool,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ) -> jax.Array:
     """Batched (I - Phi^T) t = b (transpose=True) or (I - Phi) q = c solve.
 
     phi_k: [..., V, V] stacked over apps (and fleet instances under vmap),
     b: [..., V]. The hop cap comes from the Problem-carried bound.
+
+    `interpret=True` runs the Pallas kernel body under the interpreter
+    (CPU validation); a real TPU/GPU launch passes `--use-pallas
+    --no-interpret` at the CLI and the pair flows down here unchanged.
     """
     if solver == "lu":
         n = phi_k.shape[-1]
@@ -63,10 +68,9 @@ def stage_solve(
     hops = effective_hops(
         problem.hop_bound, problem.net.n_nodes, fixed_loop=use_pallas
     )
-    # interpret=True mirrors the minplus convention (use_pallas on CPU runs
-    # the kernel body under the interpreter for validation); a TPU launch
-    # profile flipping interpret=False is a ROADMAP item.
-    return neumann_solve(m, b, hops=hops, use_pallas=use_pallas, interpret=True)
+    return neumann_solve(
+        m, b, hops=hops, use_pallas=use_pallas, interpret=interpret
+    )
 
 
 def _stage_gates(state: State, apps: Apps) -> jax.Array:
@@ -80,11 +84,11 @@ def _stage_gates(state: State, apps: Apps) -> jax.Array:
     return jnp.moveaxis(gates, 1, 0)
 
 
-def _traffic_scan(problem, state, inject, *, solver, use_pallas):
+def _traffic_scan(problem, state, inject, *, solver, use_pallas, interpret=True):
     """Forward stage scan: t_k = solve(phi_k, inject_k + gate_k * t_{k-1})."""
     solve = partial(
         stage_solve, problem=problem, transpose=True, solver=solver,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, interpret=interpret,
     )
     phi_s = jnp.moveaxis(state.phi, 1, 0)  # [K, A, V, V]
     gates = _stage_gates(state, problem.apps)  # [K, A, V]
@@ -109,18 +113,19 @@ def _source_injection(problem: Problem) -> jax.Array:
     )
 
 
-@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+@partial(jax.jit, static_argnames=("solver", "use_pallas", "interpret"))
 def stage_traffic(
     problem: Problem,
     state: State,
     *,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ) -> jax.Array:
     """[A, K, V] traffic rate t_i^{a,k} (requests/s)."""
     return _traffic_scan(
         problem, state, _source_injection(problem),
-        solver=solver, use_pallas=use_pallas,
+        solver=solver, use_pallas=use_pallas, interpret=interpret,
     )
 
 
@@ -183,16 +188,19 @@ def objective_from_loads(problem: Problem, F: jax.Array, G: jax.Array):
     return J, j_comm, j_comp
 
 
-@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+@partial(jax.jit, static_argnames=("solver", "use_pallas", "interpret"))
 def objective(
     problem: Problem,
     state: State,
     *,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ):
     """J(x, phi) plus a breakdown dict (Eq. 7 / the Fig-5 weighted variant)."""
-    t = stage_traffic(problem, state, solver=solver, use_pallas=use_pallas)
+    t = stage_traffic(
+        problem, state, solver=solver, use_pallas=use_pallas, interpret=interpret
+    )
     F, G = loads(problem, state, t)
     J, j_comm, j_comp = objective_from_loads(problem, F, G)
     return J, {"J": J, "J_comm": j_comm, "J_comp": j_comp, "F": F, "G": G, "t": t}

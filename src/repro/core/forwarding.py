@@ -43,13 +43,17 @@ from .structs import BIG_THRESHOLD, Problem, State, forwarding_mass
 _PRUNE = 1e-9  # forwarding fractions below this are swept into j*
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "solver"))
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "solver", "use_pallas", "interpret")
+)
 def forwarding_sweep(
     problem: Problem,
     state: State,
     alpha: float = 0.5,
     *,
     solver: str = "neumann",
+    use_pallas: bool = False,
+    interpret: bool = True,
     mass: jax.Array | None = None,
 ) -> State:
     """One full congestion-aware forwarding sweep (all apps/stages/nodes).
@@ -60,7 +64,10 @@ def forwarding_sweep(
     standalone callers may omit it.
     """
     n = problem.net.n_nodes
-    delta, aux = link_marginals(problem, state, solver=solver)  # [A, K, V, V]
+    delta, aux = link_marginals(
+        problem, state, solver=solver, use_pallas=use_pallas,
+        interpret=interpret,
+    )  # [A, K, V, V]
     q = aux["q"]
 
     if mass is None:
@@ -92,7 +99,10 @@ def forwarding_sweep(
     return State(x=state.x, phi=phi)
 
 
-@functools.partial(jax.jit, static_argnames=("t_phi", "alpha", "solver"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("t_phi", "alpha", "solver", "use_pallas", "interpret"),
+)
 def forwarding_update(
     problem: Problem,
     state: State,
@@ -100,6 +110,8 @@ def forwarding_update(
     t_phi: int = 8,
     alpha: float = 0.5,
     solver: str = "neumann",
+    use_pallas: bool = False,
+    interpret: bool = True,
 ) -> State:
     """T_phi inner forwarding sweeps (the paper's forwarding subproblem 8).
 
@@ -112,6 +124,9 @@ def forwarding_update(
     mass = forwarding_mass(state, problem.apps, problem.net.n_nodes)
 
     def body(_, s):
-        return forwarding_sweep(problem, s, alpha=alpha, solver=solver, mass=mass)
+        return forwarding_sweep(
+            problem, s, alpha=alpha, solver=solver, use_pallas=use_pallas,
+            interpret=interpret, mass=mass,
+        )
 
     return jax.lax.fori_loop(0, t_phi, body, state)

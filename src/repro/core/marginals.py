@@ -48,7 +48,7 @@ from .flow import (
 from .structs import BIG, Problem, State, partition_live_mask
 
 
-@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+@partial(jax.jit, static_argnames=("solver", "use_pallas", "interpret"))
 def cost_to_go(
     problem: Problem,
     state: State,
@@ -56,10 +56,14 @@ def cost_to_go(
     *,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ):
     """Returns (q [A,K,V], dp [V,V], kappa [A,P,V], t [A,K,V], F, G)."""
     if t is None:
-        t = stage_traffic(problem, state, solver=solver, use_pallas=use_pallas)
+        t = stage_traffic(
+            problem, state, solver=solver, use_pallas=use_pallas,
+            interpret=interpret,
+        )
     F, G = loads(problem, state, t)
     dp = marginal_link_weights(problem, F)  # BIG off-edges
     dp_edges = jnp.where(problem.net.adj > 0, dp, 0.0)  # safe for sums
@@ -68,7 +72,7 @@ def cost_to_go(
     L = apps.L  # [A, K]
     solve = partial(
         stage_solve, problem=problem, transpose=False, solver=solver,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, interpret=interpret,
     )
 
     def link_term(phi_k, Lk):
@@ -105,13 +109,14 @@ def cost_to_go(
     return q, dp, kappa, t, F, G
 
 
-@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+@partial(jax.jit, static_argnames=("solver", "use_pallas", "interpret"))
 def round_eval(
     problem: Problem,
     state: State,
     *,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ):
     """One full marginal evaluation of `state`: (J, aux).
 
@@ -121,7 +126,8 @@ def round_eval(
     traffic solve instead of one per consumer.
     """
     q, dp, kappa, t, F, G = cost_to_go(
-        problem, state, solver=solver, use_pallas=use_pallas
+        problem, state, solver=solver, use_pallas=use_pallas,
+        interpret=interpret,
     )
     J, j_comm, j_comp = objective_from_loads(problem, F, G)
     aux = {
@@ -133,17 +139,19 @@ def round_eval(
     return J, aux
 
 
-@partial(jax.jit, static_argnames=("solver", "use_pallas"))
+@partial(jax.jit, static_argnames=("solver", "use_pallas", "interpret"))
 def link_marginals(
     problem: Problem,
     state: State,
     *,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
 ):
     """delta^{a,k}_{ij} (Eq. 10), BIG on non-edges. Returns (delta, aux)."""
     q, dp, kappa, t, F, G = cost_to_go(
-        problem, state, solver=solver, use_pallas=use_pallas
+        problem, state, solver=solver, use_pallas=use_pallas,
+        interpret=interpret,
     )
     L = problem.apps.L  # [A, K]
     # delta[a,k,i,j] = L[a,k] * dp[i,j] + q[a,k,j]

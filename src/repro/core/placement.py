@@ -59,7 +59,10 @@ def _sp_tree_phi(nexthop_to: jax.Array, target: jax.Array, mass: jax.Array, n: i
 
 
 @functools.partial(
-    jax.jit, static_argnames=("colocate", "use_pallas", "move_margin", "solver")
+    jax.jit,
+    static_argnames=(
+        "colocate", "use_pallas", "interpret", "move_margin", "solver"
+    ),
 )
 def placement_update(
     problem: Problem,
@@ -68,6 +71,7 @@ def placement_update(
     *,
     colocate: bool = False,
     use_pallas: bool = False,
+    interpret: bool = True,
     move_margin: float = 0.02,
     solver: str = "neumann",
 ) -> State:
@@ -99,9 +103,14 @@ def placement_update(
     apps = problem.apps
     n_parts = apps.n_parts
     if ctg is None:
-        ctg = cost_to_go(problem, state, solver=solver, use_pallas=use_pallas)
+        ctg = cost_to_go(
+            problem, state, solver=solver, use_pallas=use_pallas,
+            interpret=interpret,
+        )
     q, dp, kappa, t, F, G = ctg
-    dist, nexthop = apsp_with_nexthop(dp, use_pallas=use_pallas)
+    dist, nexthop = apsp_with_nexthop(
+        dp, use_pallas=use_pallas, interpret=interpret
+    )
 
     hosts = state.hosts()  # [A, P]
     cm = problem.cost
@@ -219,13 +228,14 @@ def repair_phi(
     return State(x=new.x, phi=phi)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def repair_placement(
     problem: Problem,
     state: State,
     node_mask: jax.Array,
     *,
     use_pallas: bool = False,
+    interpret: bool = True,
 ) -> State:
     """Evict partitions from masked-out hosts to the best live node.
 
@@ -264,7 +274,9 @@ def repair_placement(
         jnp.zeros_like(problem.net.mu), problem.net.mu, problem.cost
     )
     dp0 = jnp.where(problem.net.adj > 0, dp0, BIG)
-    dist, nexthop = apsp_with_nexthop(dp0, use_pallas=use_pallas)
+    dist, nexthop = apsp_with_nexthop(
+        dp0, use_pallas=use_pallas, interpret=interpret
+    )
 
     cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
         jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost
@@ -320,9 +332,15 @@ def repair_placement(
     return repair_phi(problem, state, new_state, nexthop, force)
 
 
-@functools.partial(jax.jit, static_argnames=("colocate", "use_pallas"))
+@functools.partial(
+    jax.jit, static_argnames=("colocate", "use_pallas", "interpret")
+)
 def structured_init(
-    problem: Problem, *, colocate: bool = False, use_pallas: bool = False
+    problem: Problem,
+    *,
+    colocate: bool = False,
+    use_pallas: bool = False,
+    interpret: bool = True,
 ) -> State:
     """Feasible structured initialization (paper section IV, method a).
 
@@ -350,7 +368,9 @@ def structured_init(
         jnp.zeros_like(problem.net.mu), problem.net.mu, problem.cost
     )
     dp0 = jnp.where(problem.net.adj > 0, dp0, BIG)
-    dist, nexthop = apsp_with_nexthop(dp0, use_pallas=use_pallas)
+    dist, nexthop = apsp_with_nexthop(
+        dp0, use_pallas=use_pallas, interpret=interpret
+    )
 
     cp0 = problem.cost.w_comp * _costs.comp_cost_prime(
         jnp.zeros_like(problem.net.nu), problem.net.nu, problem.cost

@@ -24,6 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # A large-but-finite stand-in for +inf: safe under addition in the tropical
 # (min,+) semiring without producing inf-inf NaNs inside kernels.
@@ -166,25 +167,141 @@ class Problem:
 _register(Problem, ["net", "apps", "cost"], ["hop_bound"])
 
 
-def infer_hop_bound(net: Network) -> int:
-    """Unweighted graph diameter (via the existing tropical-squaring APSP)
-    plus 2, covering one host re-injection per stage hand-off.
+@dataclasses.dataclass(frozen=True)
+class HopBoundCache:
+    """Host-side snapshot of the unweighted distance closure behind one
+    `infer_hop_bound` answer — NOT a pytree; it lives with the controller.
 
-    Concrete (Python-int) by construction: call at problem build time, not
-    inside traced code."""
-    from ..kernels.minplus import apsp
+    adj       : [V, V] bool adjacency the closure was computed for
+    dist      : [V, V] fp32 exact unweighted hop counts (integers below
+                2^24, so every entry is exact in fp32; BIG where unreachable)
+    hop_bound : the derived diameter + 2
+    sweeps    : re-closure squaring sweeps the last refresh took
+                (0 = adjacency unchanged, -1 = cold from-scratch solve) —
+                the controller's `control.hop_bound.sweeps` metric
+    """
 
-    w = jnp.where(net.adj > 0, 1.0, BIG)
-    d = apsp(w)
-    diam = jnp.max(jnp.where(d < BIG_THRESHOLD, d, 0.0))
+    adj: "np.ndarray"
+    dist: "np.ndarray"
+    hop_bound: int
+    sweeps: int = -1
+
+
+def _unweighted_seed(adj: jax.Array) -> jax.Array:
+    """[V, V] reflexive 1/BIG hop weights for the unweighted closure."""
+    v = adj.shape[-1]
+    w = jnp.where(adj > 0, 1.0, BIG)
+    return jnp.where(jnp.eye(v, dtype=bool), 0.0, w)
+
+
+def _hop_bound_of(dist: "np.ndarray") -> int:
+    diam = float(np.max(np.where(dist < BIG_THRESHOLD, dist, 0.0)))
     return int(diam) + 2
 
 
-def with_hop_bound(problem: Problem) -> Problem:
+def _warm_unweighted_closure(adj_new, cache: HopBoundCache, *, use_pallas, interpret):
+    """Re-close the previous epoch's distances after a local adjacency change.
+
+    Exactness argument (DESIGN.md section 16): let S be the touched nodes
+    (any row/column of the adjacency delta). An old entry can only be wrong
+    if its optimal path visited S, and every such pair satisfies
+    `min_{s in S} d_old[i,s] + d_old[s,j] <= d_old[i,j]` — one masked
+    (min,+) product finds them all. Those entries are invalidated to BIG;
+    the surviving entries are still exact path lengths in the NEW graph
+    (their paths avoid S entirely), so the seed `min(filtered, w_new)`
+    contains every 1-hop edge and only valid upper bounds. Its transitive
+    closure is therefore the from-scratch answer — and all values are exact
+    fp32 integers, so the result is bitwise identical to a cold solve. The
+    closure loop exits one sweep after the fixpoint; local perturbations
+    typically re-close in 1-2 sweeps.
+    """
+    from ..kernels.minplus import minplus_matmul, squaring_bound
+
+    changed = adj_new != cache.adj
+    touched = jnp.asarray(changed.any(axis=0) | changed.any(axis=1))  # [V]
+    d_old = jnp.asarray(cache.dist)
+    cols = jnp.where(touched[None, :], d_old, BIG)  # keep d_old[i, s]
+    rows = jnp.where(touched[:, None], d_old, BIG)  # keep d_old[s, j]
+    via = minplus_matmul(cols, rows, use_pallas=use_pallas, interpret=interpret)
+    stale = via <= d_old
+    seed = jnp.minimum(
+        jnp.where(stale, BIG, d_old), _unweighted_seed(jnp.asarray(adj_new))
+    )
+    sweeps = 0
+    for _ in range(squaring_bound(seed.shape[-1])):
+        nxt = jnp.minimum(
+            seed,
+            minplus_matmul(seed, seed, use_pallas=use_pallas, interpret=interpret),
+        )
+        sweeps += 1
+        closed = bool(jnp.all(nxt == seed))
+        seed = nxt
+        if closed:
+            break
+    return seed, sweeps
+
+
+def hop_bound_cache(
+    net: Network,
+    cache: HopBoundCache | None = None,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> HopBoundCache:
+    """Compute (or incrementally refresh) the unweighted closure behind
+    `infer_hop_bound`.
+
+    With a `cache` from a previous round/epoch the refresh is warm-started
+    from the cached distances — bitwise identical to a cold solve (see
+    `_warm_unweighted_closure`) but one or two squaring sweeps instead of a
+    full APSP. An unchanged adjacency returns immediately.
+    """
+    adj = np.asarray(net.adj) > 0
+    if cache is not None and cache.adj.shape == adj.shape:
+        if np.array_equal(cache.adj, adj):
+            return dataclasses.replace(cache, sweeps=0)
+        d, sweeps = _warm_unweighted_closure(
+            adj, cache, use_pallas=use_pallas, interpret=interpret
+        )
+    else:
+        from ..kernels.minplus import apsp
+
+        d = apsp(
+            _unweighted_seed(jnp.asarray(adj)),
+            use_pallas=use_pallas,
+            interpret=interpret,
+        )
+        sweeps = -1
+    dist = np.asarray(d)
+    return HopBoundCache(
+        adj=adj, dist=dist, hop_bound=_hop_bound_of(dist), sweeps=sweeps
+    )
+
+
+def infer_hop_bound(
+    net: Network,
+    cache: HopBoundCache | None = None,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> int:
+    """Unweighted graph diameter plus 2, covering one host re-injection per
+    stage hand-off.
+
+    Concrete (Python-int) by construction: call at problem build time, not
+    inside traced code. Pass the previous round's `HopBoundCache` (see
+    `hop_bound_cache`) to warm-start the closure after a local topology
+    change."""
+    return hop_bound_cache(
+        net, cache, use_pallas=use_pallas, interpret=interpret
+    ).hop_bound
+
+
+def with_hop_bound(problem: Problem, cache: HopBoundCache | None = None) -> Problem:
     """Attach the inferred hop bound (no-op if already carried)."""
     if problem.hop_bound is not None:
         return problem
-    return dataclasses.replace(problem, hop_bound=infer_hop_bound(problem.net))
+    return dataclasses.replace(problem, hop_bound=infer_hop_bound(problem.net, cache))
 
 
 @dataclasses.dataclass(frozen=True)

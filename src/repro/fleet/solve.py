@@ -302,10 +302,17 @@ class FleetResult:
         )
 
 
-def _solve_one_congunaware(problem: Problem, *, use_pallas: bool, solver: str) -> dict:
+def _solve_one_congunaware(
+    problem: Problem, *, use_pallas: bool, interpret: bool, solver: str
+) -> dict:
     """Zero-iteration baseline: linear-cost init scored under true costs."""
-    state = structured_init(linearize(problem), use_pallas=use_pallas)
-    J, aux = objective(problem, state, solver=solver)
+    state = structured_init(
+        linearize(problem), use_pallas=use_pallas, interpret=interpret
+    )
+    J, aux = objective(
+        problem, state, solver=solver, use_pallas=use_pallas,
+        interpret=interpret,
+    )
     return {
         "J": J,
         "J_comm": aux["J_comm"],
@@ -316,11 +323,14 @@ def _solve_one_congunaware(problem: Problem, *, use_pallas: bool, solver: str) -
     }
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "solver"))
-def _solve_fleet_congunaware(stacked: Problem, *, use_pallas: bool, solver: str):
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret", "solver"))
+def _solve_fleet_congunaware(
+    stacked: Problem, *, use_pallas: bool, interpret: bool, solver: str
+):
     return jax.vmap(
         functools.partial(
-            _solve_one_congunaware, use_pallas=use_pallas, solver=solver
+            _solve_one_congunaware, use_pallas=use_pallas,
+            interpret=interpret, solver=solver,
         )
     )(stacked)
 
@@ -336,6 +346,7 @@ def _solve_fleet_stacked(
     patience: int,
     use_pallas: bool,
     solver: str,
+    interpret: bool = True,
     trace: bool = True,
     keep_state: bool = False,
     init_state: State | None = None,
@@ -344,7 +355,10 @@ def _solve_fleet_stacked(
     """Dispatch one stacked batch onto the shared round engine."""
     if method == "CongUnaware":
         out = dict(
-            _solve_fleet_congunaware(stacked, use_pallas=use_pallas, solver=solver)
+            _solve_fleet_congunaware(
+                stacked, use_pallas=use_pallas, interpret=interpret,
+                solver=solver,
+            )
         )
         out["rounds"] = jnp.int32(0)
         out["trace"] = None
@@ -360,6 +374,7 @@ def _solve_fleet_stacked(
             colocate=method == "CoLocated",
             track_best=method != "OneShot",
             use_pallas=use_pallas,
+            interpret=interpret,
             solver=solver,
             trace=trace,
             init_state=init_state,
@@ -525,6 +540,7 @@ def solve_fleet(
     shard: bool = False,
     devices: int | None = None,
     use_pallas: bool = False,
+    interpret: bool = True,
     solver: str = "neumann",
     chunk_size: int | None = None,
     envelope_cap_gb: float | None = None,
@@ -549,6 +565,9 @@ def solve_fleet(
     devices    : cap the fleet mesh to the first N local devices
                  (requires shard=True; asking for more than exist raises)
     solver     : "neumann" (hop-capped propagation, default) | "lu" (dense)
+    interpret  : with use_pallas=True, run the kernel bodies under the Pallas
+                 interpreter (CPU validation). A real TPU/GPU launch passes
+                 interpret=False; ignored when use_pallas=False.
     chunk_size : split ensembles larger than this into fixed-B chunks that
                  share one global (V, A) envelope + hop bound, reusing a
                  single compiled program per (V, A, B) signature; the tail
@@ -596,8 +615,8 @@ def solve_fleet(
         raise ValueError("keep_state is unsupported for CongUnaware")
     solve_kw = dict(
         method=method, m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol,
-        patience=patience, use_pallas=use_pallas, solver=solver, trace=trace,
-        keep_state=keep_state,
+        patience=patience, use_pallas=use_pallas, interpret=interpret,
+        solver=solver, trace=trace, keep_state=keep_state,
     )
     n = len(problems)
     mesh, n_dev, reason = _plan_mesh(shard, devices)

@@ -1,1 +1,9 @@
-from .ops import minplus_matmul, apsp, apsp_with_nexthop  # noqa: F401
+from .ops import (  # noqa: F401
+    BIG,
+    BIG_THRESHOLD,
+    apsp,
+    apsp_with_nexthop,
+    minplus_closure,
+    minplus_matmul,
+    squaring_bound,
+)

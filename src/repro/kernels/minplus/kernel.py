@@ -36,9 +36,12 @@ KINNER = 8
 def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, k_steps: int):
     """One (i, j, k) grid step: o[i,j] = min(o[i,j], min_k a[i,k]+b[k,j])."""
 
+    # +inf (not BIG) is the accumulator identity: BIG-padding chunks then
+    # contribute BIG+BIG candidates, exactly what the pure-jnp oracle
+    # computes for all-non-edge rows, so kernel == oracle bitwise.
     @pl.when(pl.program_id(2) == 0)
     def _init():
-        o_ref[...] = jnp.full_like(o_ref, BIG)
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
 
     a = a_ref[...]  # [bm, bk]
     b = b_ref[...]  # [bk, bn]
@@ -50,9 +53,46 @@ def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int, k_steps: int):
         cand = jnp.min(a_chunk[:, :, None] + b_chunk[None, :, :], axis=1)
         return jnp.minimum(acc, cand)
 
-    acc = jnp.full_like(o_ref[...], BIG)
+    acc = jnp.full_like(o_ref[...], jnp.inf)
     acc = jax.lax.fori_loop(0, bk // KINNER, body, acc)
     o_ref[...] = jnp.minimum(o_ref[...], acc)
+
+
+def _minplus_argmin_kernel(a_ref, b_ref, o_ref, ix_ref, *, bk: int):
+    """Fused (min, argmin_k) grid step for the next-hop table.
+
+    Tie-break contract: FIRST minimizing k, matching `jnp.argmin` on the
+    full candidate tensor. Within a chunk `jnp.argmin` already returns the
+    first minimum; across chunks and K tiles the strict `<` update keeps
+    the earliest, because k advances monotonically (K is the innermost
+    "arbitrary" grid dim and chunks walk the tile in order).
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+        ix_ref[...] = jnp.zeros_like(ix_ref)
+
+    a = a_ref[...]  # [bm, bk]
+    b = b_ref[...]  # [bk, bn]
+
+    def body(c, carry):
+        acc, idx = carry
+        a_chunk = jax.lax.dynamic_slice_in_dim(a, c * KINNER, KINNER, axis=1)
+        b_chunk = jax.lax.dynamic_slice_in_dim(b, c * KINNER, KINNER, axis=0)
+        cand = a_chunk[:, :, None] + b_chunk[None, :, :]  # [bm, KINNER, bn]
+        cmin = jnp.min(cand, axis=1)
+        carg = jnp.argmin(cand, axis=1).astype(jnp.int32) + c * KINNER
+        upd = cmin < acc
+        return jnp.where(upd, cmin, acc), jnp.where(upd, carg, idx)
+
+    acc = jnp.full_like(o_ref[...], jnp.inf)
+    idx = jnp.zeros_like(ix_ref[...])
+    acc, idx = jax.lax.fori_loop(0, bk // KINNER, body, (acc, idx))
+    upd = acc < o_ref[...]
+    o_ref[...] = jnp.where(upd, acc, o_ref[...])
+    ix_ref[...] = jnp.where(upd, idx + kk * bk, ix_ref[...])
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -96,3 +136,55 @@ def minplus_matmul_pallas(
         interpret=interpret,
     )(a_p, b_p)
     return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def minplus_matmul_argmin_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused tropical matmul + argmin: (min_k A[i,k]+B[k,j], argmin_k ...).
+
+    This is the next-hop table of `apsp_with_nexthop` computed tile-resident:
+    the [M, K, N] candidate tensor never exists, only [bm, KINNER, bn] chunks
+    in VMEM. Padding uses BIG so padded k indices lose every strict-< update
+    against real candidates (and on all-non-edge ties the first — real —
+    index wins, matching `jnp.argmin`).
+    """
+    (m, k), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    pad_m = (-m) % block
+    pad_k = (-k) % block
+    pad_n = (-n) % block
+    a_p = jnp.pad(a, ((0, pad_m), (0, pad_k)), constant_values=BIG)
+    b_p = jnp.pad(b, ((0, pad_k), (0, pad_n)), constant_values=BIG)
+    mp, kp, np_ = m + pad_m, k + pad_k, n + pad_n
+
+    grid = (mp // block, np_ // block, kp // block)
+    val, idx = pl.pallas_call(
+        functools.partial(_minplus_argmin_kernel, bk=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block, block), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((block, block), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        ],
+        compiler_params=_COMPILER_PARAMS_CLS(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(a_p, b_p)
+    return val[:m, :n], idx[:m, :n]

@@ -1,19 +1,75 @@
-"""Pure-jnp oracle for the tropical (min,+) matmul and APSP.
+"""Pure-jnp oracle + blocked (k-chunked) tropical matmul and APSP.
 
 (A (x) B)[i, j] = min_k A[i, k] + B[k, j]
 
-This is the reference the Pallas kernel is tested against (tests/test_kernels
-sweeps shapes/dtypes with interpret=True).
+`minplus_matmul_ref` is the one-broadcast oracle the Pallas kernel is tested
+against (tests/test_kernels sweeps shapes/dtypes with interpret=True). Its
+[M, K, N] intermediate is O(V^3) memory for APSP squaring — 512 MiB per
+matmul at V=512 — which is the scaling cliff PR 8 removes. The default
+non-Pallas compute path is `minplus_matmul_blocked`: the same reduction
+streamed over K chunks with a lax.scan, peak memory O(M * block_k * N),
+bitwise-identical results (min is associative/commutative and the chunk
+padding candidates equal the oracle's own all-non-edge sums).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+
+BIG = 1e18
+
+# Broadcast-intermediate budget for the blocked path: block_k is sized so the
+# [M, block_k, N] candidate tensor stays near 64 MiB fp32 (2^24 elements).
+_BLOCK_ELEMS = 1 << 24
 
 
 def minplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """[M,K] (x) [K,N] -> [M,N] in fp32. Memory O(M*K*N) — oracle only."""
     return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def default_block_k(m: int, k: int, n: int) -> int:
+    """Largest multiple-of-8 K chunk whose broadcast fits the element budget."""
+    bk = max(1, _BLOCK_ELEMS // max(m * n, 1))
+    bk = max(8, (bk // 8) * 8)
+    return min(k, bk)
+
+
+def minplus_matmul_blocked(
+    a: jax.Array, b: jax.Array, *, block_k: int | None = None
+) -> jax.Array:
+    """Tropical matmul with the K reduction streamed in `block_k` chunks.
+
+    Bitwise-equal to `minplus_matmul_ref` for any inputs (padding chunks
+    contribute BIG+BIG candidates, exactly what the oracle computes for
+    all-non-edge rows; the running min starts at +inf so padding can never
+    shadow a real candidate). Peak memory O(M * block_k * N) instead of
+    O(M*K*N).
+    """
+    (m, k), (k2, n) = a.shape, b.shape
+    assert k == k2, (a.shape, b.shape)
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    bk = default_block_k(m, k, n) if block_k is None else min(int(block_k), k)
+    if bk >= k:
+        return minplus_matmul_ref(a, b)
+    pad_k = (-k) % bk
+    nk = (k + pad_k) // bk
+    a_p = jnp.pad(a, ((0, 0), (0, pad_k)), constant_values=BIG)
+    b_p = jnp.pad(b, ((0, pad_k), (0, 0)), constant_values=BIG)
+    a3 = jnp.moveaxis(a_p.reshape(m, nk, bk), 1, 0)  # [nk, M, bk]
+    b3 = b_p.reshape(nk, bk, n)                      # [nk, bk, N]
+
+    def body(acc, chunk):
+        a_c, b_c = chunk
+        cand = jnp.min(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.minimum(acc, cand), None
+
+    acc0 = jnp.full((m, n), jnp.inf, jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (a3, b3))
+    return acc
 
 
 def apsp_ref(w: jax.Array) -> jax.Array:
@@ -24,7 +80,6 @@ def apsp_ref(w: jax.Array) -> jax.Array:
     n = w.shape[-1]
     d = w
     # After ceil(log2(n-1)) squarings, paths of any length are covered.
-    import math
     n_iter = max(1, math.ceil(math.log2(max(n - 1, 2))))
     for _ in range(n_iter):
         d = jnp.minimum(d, minplus_matmul_ref(d, d))

@@ -20,9 +20,15 @@ lane dimension (128-aligned) and the matvec on the MXU. Batch is the grid's
 only dimension; each grid step owns one operator.
 
 VMEM budget per grid step (fp32): W tile Vp^2 * 4 B + three [1, Vp] rows.
-Vp = 512 -> 1 MiB, Vp = 1024 -> 4 MiB; beyond that the operator must be
-tiled over K like the minplus kernel (not needed at the paper's scales —
-guarded by an assert).
+Vp = 512 -> 1 MiB, Vp = 1024 -> 4 MiB. Past `MAX_VMEM_V` the operator no
+longer fits VMEM whole, so the wrapper switches to the K-TILED kernel: the
+grid grows (hops, k_tiles) axes, W streams through VMEM as [block_k, Vp]
+row tiles, and the iterate x plus the hop accumulator live in VMEM scratch
+that persists across the sequential grid steps (the standard Pallas-TPU
+revisiting pattern — scratch carries state between grid iterations of the
+same batch element). An opt-in `operand_dtype=jnp.bfloat16` streams W (and
+feeds the MXU) in bf16 while the accumulator, iterate, and residual check
+stay fp32 — the mixed-precision contract of DESIGN.md section 16.
 """
 from __future__ import annotations
 
@@ -38,6 +44,9 @@ _COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompil
 
 LANE = 128
 MAX_VMEM_V = 1024
+# Contraction-axis tile of the K-tiled kernel: [block_k, Vp] W row tiles.
+# 512 keeps the streamed tile at Vp = 2048 under 4 MiB in fp32.
+DEFAULT_BLOCK_K = 512
 
 
 def _neumann_kernel(w_ref, b_ref, o_ref, *, hops: int, tol: float):
@@ -57,7 +66,66 @@ def _neumann_kernel(w_ref, b_ref, o_ref, *, hops: int, tol: float):
     o_ref[...] = x
 
 
-@functools.partial(jax.jit, static_argnames=("hops", "tol", "interpret"))
+def _neumann_tiled_kernel(
+    w_ref, b_ref, o_ref, x_ref, acc_ref, done_ref, *,
+    hops: int, tol: float, nk: int, bk: int,
+):
+    """K-tiled grid step: one [block_k, Vp] W row tile of one hop.
+
+    Grid (batch, hops, k_tiles), K innermost. Scratch persists across the
+    sequential (hops, k_tiles) steps of one batch element:
+
+      x_ref    [1, Vp] fp32 VMEM — the current iterate
+      acc_ref  [1, Vp] fp32 VMEM — this hop's b + x @ W partial sum
+      done_ref [1] int32 SMEM    — the residual-freeze flag
+
+    The hop closes on the last K tile with the exact done-before-freeze
+    semantics of `_neumann_kernel`: the converging iteration's x_new IS
+    applied, later hops keep the frozen carry. When W streams in bf16 the
+    x chunk is cast to match, but the dot always accumulates fp32
+    (`preferred_element_type`) and the residual test runs on the fp32
+    scratch values.
+    """
+    h = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(jnp.logical_and(h == 0, kk == 0))
+    def _init():
+        x_ref[...] = b_ref[...]
+        done_ref[0] = 0
+
+    @pl.when(kk == 0)
+    def _reset():
+        acc_ref[...] = b_ref[...]
+
+    x_chunk = x_ref[:, pl.ds(kk * bk, bk)]  # [1, bk]
+    w_tile = w_ref[...]  # [bk, Vp], possibly bf16
+    acc_ref[...] += jnp.dot(
+        x_chunk.astype(w_tile.dtype), w_tile,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kk == nk - 1)
+    def _finish():
+        x_old = x_ref[...]
+        x_new = acc_ref[...]
+        resid = jnp.max(jnp.abs(x_new - x_old))
+        scale = jnp.max(jnp.abs(x_new)) + 1e-30
+        done = done_ref[0] > 0
+        x_ref[...] = jnp.where(done, x_old, x_new)
+        done_ref[0] = jnp.logical_or(done, resid <= tol * scale).astype(
+            jnp.int32
+        )
+
+    @pl.when(jnp.logical_and(h == hops - 1, kk == nk - 1))
+    def _out():
+        o_ref[...] = x_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hops", "tol", "interpret", "block_k", "operand_dtype"),
+)
 def neumann_solve_pallas(
     m: jax.Array,
     b: jax.Array,
@@ -65,37 +133,84 @@ def neumann_solve_pallas(
     hops: int,
     tol: float = 1e-6,
     interpret: bool = False,
+    block_k: int | None = None,
+    operand_dtype=None,
 ) -> jax.Array:
     """x = (I - m)^{-1} b (truncated Neumann) for m: [N, V, V], b: [N, V].
 
     The V axis is zero-padded to a lane multiple; padded coordinates carry
     zero source and zero coupling, so they stay exactly zero through every
-    hop and never contaminate the valid region.
+    hop and never contaminate the valid region (bf16 casts preserve exact
+    zeros, so the invariant survives mixed precision too).
+
+    Dispatch: V <= MAX_VMEM_V with default precision keeps the original
+    single-tile kernel (operator resident in VMEM, fori_loop over hops).
+    Larger V — or an explicit `block_k` / `operand_dtype` — selects the
+    K-tiled kernel: grid (batch, hops, k_tiles) with W streamed as
+    [block_k, Vp] row tiles and the iterate carried in VMEM scratch.
+    `operand_dtype=jnp.bfloat16` halves the streamed W traffic; the
+    accumulator and residual check stay fp32.
     """
     n_batch, v, v2 = m.shape
     assert v == v2 and b.shape == (n_batch, v), (m.shape, b.shape)
-    assert v <= MAX_VMEM_V, (
-        f"V={v} exceeds the single-tile VMEM budget (max {MAX_VMEM_V}); "
-        "tile the operator over K before raising this limit"
-    )
+    assert hops >= 1, hops
     m = m.astype(jnp.float32)
     b = b.astype(jnp.float32)
 
-    pad_v = (-v) % LANE
-    vp = v + pad_v
+    if v <= MAX_VMEM_V and block_k is None and operand_dtype is None:
+        pad_v = (-v) % LANE
+        vp = v + pad_v
+        w = jnp.pad(
+            jnp.swapaxes(m, -1, -2), ((0, 0), (0, pad_v), (0, pad_v))
+        )
+        b_p = jnp.pad(b, ((0, 0), (0, pad_v)))
+        out = pl.pallas_call(
+            functools.partial(_neumann_kernel, hops=hops, tol=tol),
+            grid=(n_batch,),
+            in_specs=[
+                pl.BlockSpec((None, vp, vp), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, vp), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, vp), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_batch, vp), jnp.float32),
+            compiler_params=_COMPILER_PARAMS_CLS(
+                dimension_semantics=("parallel",)
+            ),
+            interpret=interpret,
+        )(w, b_p)
+        return out[:, :v]
+
+    bk = DEFAULT_BLOCK_K if block_k is None else int(block_k)
+    if bk % LANE:
+        raise ValueError(f"block_k must be a multiple of {LANE}, got {bk}")
+    bk = min(bk, -(-v // LANE) * LANE)
+    vp = -(-v // bk) * bk  # pad V to a whole number of K tiles
+    nk = vp // bk
+    pad_v = vp - v
     w = jnp.pad(jnp.swapaxes(m, -1, -2), ((0, 0), (0, pad_v), (0, pad_v)))
+    if operand_dtype is not None:
+        w = w.astype(operand_dtype)
     b_p = jnp.pad(b, ((0, 0), (0, pad_v)))
 
     out = pl.pallas_call(
-        functools.partial(_neumann_kernel, hops=hops, tol=tol),
-        grid=(n_batch,),
+        functools.partial(
+            _neumann_tiled_kernel, hops=hops, tol=tol, nk=nk, bk=bk
+        ),
+        grid=(n_batch, hops, nk),
         in_specs=[
-            pl.BlockSpec((None, vp, vp), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, vp), lambda i: (i, 0)),
+            pl.BlockSpec((None, bk, vp), lambda i, h, k: (i, k, 0)),
+            pl.BlockSpec((1, vp), lambda i, h, k: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, vp), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((1, vp), lambda i, h, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n_batch, vp), jnp.float32),
-        compiler_params=_COMPILER_PARAMS_CLS(dimension_semantics=("parallel",)),
+        scratch_shapes=[
+            pltpu.VMEM((1, vp), jnp.float32),
+            pltpu.VMEM((1, vp), jnp.float32),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
+        compiler_params=_COMPILER_PARAMS_CLS(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")
+        ),
         interpret=interpret,
     )(w, b_p)
     return out[:, :v]

@@ -101,14 +101,18 @@ def _propagate_xla(m: jax.Array, b: jax.Array, hops: int, tol: float) -> jax.Arr
 
 
 def _propagate_pallas(
-    m: jax.Array, b: jax.Array, hops: int, tol: float, interpret: bool
+    m: jax.Array, b: jax.Array, hops: int, tol: float, interpret: bool,
+    block_k: int | None = None, operand_dtype=None,
 ) -> jax.Array:
     """Flatten leading batch dims and run the fused kernel."""
     batch_shape = b.shape[:-1]
     v = b.shape[-1]
     m2 = m.reshape((-1, v, v))
     b2 = b.reshape((-1, v))
-    out = neumann_solve_pallas(m2, b2, hops=hops, tol=tol, interpret=interpret)
+    out = neumann_solve_pallas(
+        m2, b2, hops=hops, tol=tol, interpret=interpret,
+        block_k=block_k, operand_dtype=operand_dtype,
+    )
     return out.reshape(batch_shape + (v,))
 
 
@@ -120,17 +124,27 @@ def neumann_solve(
     tol: float = DEFAULT_TOL,
     use_pallas: bool = False,
     interpret: bool = True,
+    block_k: int | None = None,
+    operand_dtype=None,
 ) -> jax.Array:
     """Solve (I - m) x = b by truncated Neumann propagation.
 
     m: [..., V, V] propagation operator (pass phi^T for the traffic fixed
     point (I - Phi^T) t = b, phi for the cost-to-go (I - Phi) q = c);
     b: [..., V] with matching batch dims. Differentiable in both m and b.
+
+    `block_k` / `operand_dtype` select the K-tiled Pallas kernel explicitly
+    (V > MAX_VMEM_V auto-tiles); `operand_dtype=jnp.bfloat16` streams the
+    operator in bf16 with fp32 accumulation (kernel.py). Both are ignored
+    on the XLA path.
     """
 
     def run(op, rhs):
         if use_pallas:
-            return _propagate_pallas(op, rhs, hops, tol, interpret)
+            return _propagate_pallas(
+                op, rhs, hops, tol, interpret,
+                block_k=block_k, operand_dtype=operand_dtype,
+            )
         return _propagate_xla(op, rhs, hops, tol)
 
     mt = jnp.swapaxes(m, -1, -2)

@@ -45,6 +45,7 @@ from repro.chaos import (
     generate_trace,
     repair_fleet,
 )
+from repro.core.structs import hop_bound_cache
 from repro.fleet import FAMILIES, sample_fleet, solve_fleet
 from repro.fleet.pad import (
     fleet_envelope,
@@ -179,12 +180,14 @@ def run_control(
     patience: int = 4,
     solver: str = "neumann",
     use_pallas: bool = False,
+    interpret: bool = True,
     round_to: int = 8,
     shard: bool = False,
     devices: int | None = None,
     timeout_s: float | None = None,
     backoff_s: float = 0.0,
     compare_cold: bool = False,
+    verify_hop_bound: bool = False,
     trace_kwargs: dict | None = None,
 ) -> ControlResult:
     """Run the fault-injection control loop over a fleet (module doc).
@@ -192,12 +195,30 @@ def run_control(
     fleet        : base (unperturbed) `Problem` list
     trace        : a pre-generated `FaultTrace`; None generates one from
                    (fleet, epochs, seed, **trace_kwargs)
+    interpret    : with use_pallas, run kernel bodies under the Pallas
+                   interpreter (CPU validation; --no-interpret on real TPU)
     timeout_s    : soft per-epoch budget — once exceeded, the ladder stops
                    escalating and carries the repaired placement
     backoff_s    : base of the exponential retry backoff between rungs
     compare_cold : on each warm event-epoch, also run an (unused) cold
                    solve-from-scratch on the same perturbed problems and
                    record its rounds — the warm-start efficiency baseline
+    verify_hop_bound : per epoch, re-derive every instance's hop bound from
+                   scratch and assert the incremental `HopBoundCache` refresh
+                   matches it bitwise (the §16 exactness contract; CI runs
+                   the chaos job with this on)
+
+    The solver's hop bound stays PINNED from the base fleet (shape
+    stability: re-deriving it per epoch would recompile the engine whenever
+    the diameter moved). The per-epoch `hop_bound_cache` maintenance is the
+    cheap incremental tracker feeding the `control.hop_bound.*` metrics —
+    most epochs leave adjacency untouched (degradations scale mu, flash
+    crowds scale lam) and cost one host-side array compare; node churn
+    epochs re-close warm in one or two squaring sweeps. On the XLA solver
+    path the `effective_hops` V+1 floor keeps the solve exact even when the
+    true post-fault diameter exceeds the pinned bound; the tracker counts
+    those epochs (`control.hop_bound.exceeds_pinned`) so a Pallas fixed-hop
+    deployment knows when its slack was actually consumed.
     """
     base = list(fleet)
     n_inst = len(base)
@@ -223,7 +244,7 @@ def run_control(
     solve_common = dict(
         m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol, patience=patience,
         round_to=round_to, shard=shard, devices=devices, solver=solver,
-        use_pallas=use_pallas, keep_state=True,
+        use_pallas=use_pallas, interpret=interpret, keep_state=True,
         # The controller re-validates shape-stable perturbations of an
         # already-validated base fleet every epoch; keep the checks on —
         # they are exactly the NaN firewall this loop exists for.
@@ -235,6 +256,7 @@ def run_control(
     prev_state = None
     prev_health = [InstanceHealth() for _ in range(n_inst)]
     force_all_active = False
+    hop_caches = [None] * n_inst
     t_run = time.time()
 
     for epoch, fired, healths in trace.timeline():
@@ -246,6 +268,37 @@ def run_control(
                 ]
                 probs = [pr for pr, _ in pairs]
                 masks = [m for _, m in pairs]
+            with span("control.hop_bound", epoch=epoch):
+                hop_caches = [
+                    hop_bound_cache(
+                        pr.net, hc, use_pallas=use_pallas, interpret=interpret
+                    )
+                    for pr, hc in zip(probs, hop_caches)
+                ]
+                if verify_hop_bound:
+                    for i, (pr, hc) in enumerate(zip(probs, hop_caches)):
+                        scratch = hop_bound_cache(
+                            pr.net, None, use_pallas=use_pallas,
+                            interpret=interpret,
+                        )
+                        if not np.array_equal(hc.dist, scratch.dist):
+                            raise AssertionError(
+                                f"control: epoch {epoch} instance {i}: "
+                                "incremental hop-bound closure diverged "
+                                "from the from-scratch solve "
+                                f"(warm bound {hc.hop_bound}, scratch "
+                                f"{scratch.hop_bound})"
+                            )
+                tracked = max(c.hop_bound for c in hop_caches)
+                reg.gauge("control.hop_bound.max").set(tracked)
+                reg.counter("control.hop_bound.warm_sweeps").inc(
+                    sum(c.sweeps for c in hop_caches if c.sweeps > 0)
+                )
+                reg.counter("control.hop_bound.unchanged").inc(
+                    sum(1 for c in hop_caches if c.sweeps == 0)
+                )
+                if tracked > hop_bound:
+                    reg.counter("control.hop_bound.exceeds_pinned").inc()
             changed = np.array(
                 [h != ph for h, ph in zip(healths, prev_health)], dtype=bool
             )
@@ -256,6 +309,7 @@ def run_control(
                         probs, prev_state, masks, round_to=round_to,
                         envelope=envelope, hop_bound=hop_bound,
                         n_parts=part_env, use_pallas=use_pallas,
+                        interpret=interpret,
                     )
 
             mode = "warm" if repaired is not None else "cold"
@@ -418,6 +472,21 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--solver", choices=("neumann", "lu"), default="neumann"
     )
+    ap.add_argument(
+        "--use-pallas", action="store_true",
+        help="route the min-plus APSP and Neumann propagation through the "
+        "Pallas kernels instead of the pure-XLA paths",
+    )
+    ap.add_argument(
+        "--interpret", action=argparse.BooleanOptionalAction, default=True,
+        help="with --use-pallas, run kernel bodies under the Pallas "
+        "interpreter (a real TPU/GPU launch passes --no-interpret)",
+    )
+    ap.add_argument(
+        "--verify-hop-bound", action="store_true",
+        help="assert the incremental per-epoch hop-bound cache matches a "
+        "from-scratch closure bitwise (exactness gate; used by CI chaos)",
+    )
     ap.add_argument("--shard", action="store_true")
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument(
@@ -472,9 +541,11 @@ def main(argv=None) -> int:
 
     ctl = run_control(
         fleet, trace=trace, m_max=args.m_max, t_phi=args.t_phi,
-        solver=args.solver, round_to=args.round_to, shard=args.shard,
+        solver=args.solver, use_pallas=args.use_pallas,
+        interpret=args.interpret, round_to=args.round_to, shard=args.shard,
         devices=args.devices, timeout_s=args.timeout_s,
         backoff_s=args.backoff_s, compare_cold=args.compare_cold,
+        verify_hop_bound=args.verify_hop_bound,
     )
     s = ctl.summary()
     print(

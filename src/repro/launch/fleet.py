@@ -93,6 +93,20 @@ def main(argv=None) -> int:
         "(default) or dense LU reference",
     )
     ap.add_argument(
+        "--use-pallas",
+        action="store_true",
+        help="route the min-plus APSP and Neumann propagation through the "
+        "Pallas kernels instead of the pure-XLA paths",
+    )
+    ap.add_argument(
+        "--interpret",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="with --use-pallas, run the kernel bodies under the Pallas "
+        "interpreter (CPU validation). A real TPU/GPU launch passes "
+        "--use-pallas --no-interpret; no effect without --use-pallas",
+    )
+    ap.add_argument(
         "--chunk-size",
         type=int,
         default=None,
@@ -148,6 +162,8 @@ def main(argv=None) -> int:
             shard=args.shard,
             devices=args.devices,
             solver=args.solver,
+            use_pallas=args.use_pallas,
+            interpret=args.interpret,
             chunk_size=args.chunk_size,
             envelope_cap_gb=args.envelope_cap_gb,
         )
@@ -157,6 +173,8 @@ def main(argv=None) -> int:
             {
                 "method": res.method,
                 "solver": args.solver,
+                "use_pallas": args.use_pallas,
+                "interpret": args.interpret,
                 "instances": res.n_instances,
                 # split depths in the batch (per-instance P also appears in
                 # each per_instance row as "partitions")

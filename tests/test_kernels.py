@@ -1,5 +1,7 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracles."""
+import dataclasses
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -7,11 +9,21 @@ import numpy as np
 import pytest
 from _optional_deps import given, settings, st
 
-from repro.kernels.minplus.kernel import minplus_matmul_pallas
-from repro.kernels.minplus.ref import apsp_ref, minplus_matmul_ref
-from repro.kernels.minplus.ops import apsp, apsp_with_nexthop
+from repro.kernels.minplus.kernel import (
+    minplus_matmul_argmin_pallas,
+    minplus_matmul_pallas,
+)
+from repro.kernels.minplus.ref import apsp_ref, minplus_matmul_blocked, minplus_matmul_ref
+from repro.kernels.minplus.ops import _nexthop_blocked, apsp, apsp_with_nexthop
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
+
+# CI kernels-smoke knob: set REPRO_BIG_KERNEL_V (e.g. 1536) to run the
+# interpret-mode parity sweeps at a V past the single-tile VMEM cap.
+BIGV = int(os.environ.get("REPRO_BIG_KERNEL_V", "0"))
+bigv_only = pytest.mark.skipif(
+    BIGV < 1, reason="set REPRO_BIG_KERNEL_V to run the big-V parity sweeps"
+)
 
 
 # ---------------------------------------------------------------------------
@@ -120,6 +132,211 @@ def test_apsp_triangle_inequality(n, seed):
     # d[i,j] <= d[i,k] + d[k,j] for all triples (vectorized check).
     via = (d[:, :, None] + d[None, :, :]).min(axis=1)
     assert (d <= via + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# blocked (k-chunked) tropical matmul — the O(V^2)-memory default path
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(1, 40),
+    st.integers(2, 48),
+    st.integers(1, 40),
+    st.integers(0, 10_000),
+    st.sampled_from([0.0, 0.3, 0.9]),
+)
+@settings(max_examples=25, deadline=None)
+def test_blocked_matches_ref_bitwise(m, k, n, seed, density):
+    """Streaming the K reduction in chunks must be BITWISE the oracle:
+    min over the same candidate multiset, padding contributes only
+    BIG+BIG candidates that +inf-initialized accumulators never keep."""
+    rng = np.random.RandomState(seed)
+    a = rng.uniform(0, 10, (m, k)).astype(np.float32)
+    b = rng.uniform(0, 10, (k, n)).astype(np.float32)
+    a[rng.rand(m, k) < density] = 1e18
+    b[rng.rand(k, n) < density] = 1e18
+    # block_k=8 forces real chunking (and ragged padding) at every size.
+    got = minplus_matmul_blocked(jnp.asarray(a), jnp.asarray(b), block_k=8)
+    want = minplus_matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_blocked_all_big_rows_cols_and_diagonal():
+    """Degenerate rows (all non-edge), columns, and a reflexive zero
+    diagonal — the exact shapes APSP squaring feeds the matmul."""
+    v = 24
+    rng = np.random.RandomState(1)
+    w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
+    w[rng.rand(v, v) < 0.4] = 1e18
+    w[3, :] = 1e18  # isolated source
+    w[:, 7] = 1e18  # unreachable sink
+    np.fill_diagonal(w, 0.0)
+    for bk in (8, 16, v):  # v: degenerate single chunk (oracle passthrough)
+        got = minplus_matmul_blocked(jnp.asarray(w), jnp.asarray(w), block_k=bk)
+        want = minplus_matmul_ref(jnp.asarray(w), jnp.asarray(w))
+        assert np.array_equal(np.asarray(got), np.asarray(want)), bk
+
+
+def test_apsp_squaring_matches_floyd_warshall():
+    """The n_iter/early-exit squaring closure agrees with the FW default
+    (bitwise: integer weights make every path sum exact in fp32)."""
+    rng = np.random.RandomState(2)
+    n = 48
+    W = np.full((n, n), 1e18, np.float32)
+    for _ in range(200):
+        u, v = rng.randint(0, n, 2)
+        if u != v:
+            W[u, v] = float(rng.randint(1, 8))
+    d_fw = np.asarray(apsp(jnp.asarray(W)))
+    d_sq = np.asarray(apsp(jnp.asarray(W), n_iter=math.ceil(math.log2(n))))
+    d_ne = np.asarray(apsp(jnp.asarray(W), n_iter=8, early_exit=False))
+    assert np.array_equal(d_fw, d_sq)
+    assert np.array_equal(d_fw, d_ne)
+
+
+# ---------------------------------------------------------------------------
+# fused min+argmin next-hop: kernel and blocked fallback vs the full tensor
+# ---------------------------------------------------------------------------
+def _random_weights(n, n_edges, seed, integer=False):
+    rng = np.random.RandomState(seed)
+    W = np.full((n, n), 1e18, np.float32)
+    for _ in range(n_edges):
+        u, v = rng.randint(0, n, 2)
+        if u != v:
+            W[u, v] = float(rng.randint(1, 5)) if integer else rng.uniform(0.1, 4.0)
+    return W
+
+
+def test_fused_argmin_matches_two_step():
+    """The fused kernel == materialize [V,V,V], min + first-min argmin."""
+    n = 72
+    W = _random_weights(n, 400, seed=9)
+    dist = np.asarray(apsp(jnp.asarray(W)))
+    val, nh = minplus_matmul_argmin_pallas(
+        jnp.asarray(W), jnp.asarray(dist), interpret=True
+    )
+    cand = W[:, :, None] + dist[None, :, :]
+    np.testing.assert_allclose(np.asarray(val), cand.min(axis=1), rtol=1e-6)
+    assert np.array_equal(np.asarray(nh), cand.argmin(axis=1))
+
+
+def test_fused_argmin_tie_break_first_min():
+    """Integer weights force exact ties; the strict-< carry must keep the
+    FIRST minimizing k, like jnp.argmin on the full candidate tensor."""
+    n = 40
+    W = _random_weights(n, 300, seed=11, integer=True)
+    dist = np.asarray(apsp(jnp.asarray(W)))
+    cand = W[:, :, None] + dist[None, :, :]
+    want = cand.argmin(axis=1)
+    _, nh_pl = minplus_matmul_argmin_pallas(
+        jnp.asarray(W), jnp.asarray(dist), interpret=True
+    )
+    nh_bl = _nexthop_blocked(jnp.asarray(W), jnp.asarray(dist))
+    assert np.array_equal(np.asarray(nh_pl), want)
+    assert np.array_equal(np.asarray(nh_bl), want)
+
+
+def test_apsp_with_nexthop_pallas_matches_fallback():
+    """End-to-end parity of the two apsp_with_nexthop paths. Integer
+    weights keep both distance strategies exact, so the next-hop tables
+    (same first-min tie-break) agree bitwise."""
+    n = 60
+    W = _random_weights(n, 500, seed=13, integer=True)
+    d_bl, nh_bl = apsp_with_nexthop(jnp.asarray(W))
+    d_pl, nh_pl = apsp_with_nexthop(jnp.asarray(W), use_pallas=True, interpret=True)
+    assert np.array_equal(np.asarray(d_bl), np.asarray(d_pl))
+    assert np.array_equal(np.asarray(nh_bl), np.asarray(nh_pl))
+
+
+# ---------------------------------------------------------------------------
+# incremental hop-bound cache: warm re-closure == cold solve, bitwise
+# ---------------------------------------------------------------------------
+@given(st.integers(8, 24), st.integers(0, 10_000), st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_hop_bound_cache_warm_matches_cold(n, seed, n_events):
+    """Arbitrary chaos event sequences (node down, link remove, link add):
+    after every event the warm-started closure must be bitwise identical
+    to a from-scratch solve (1/BIG hop weights are exact fp32 integers)."""
+    from repro.core import hop_bound_cache, random_connected
+
+    p = random_connected(n, max(2, n // 3), seed=seed)
+    net = p.net
+    cache = hop_bound_cache(net)
+    assert cache.sweeps == -1  # cold solve
+    rng = np.random.RandomState(seed + 1)
+    adj = np.asarray(net.adj).copy()
+    for _ in range(n_events):
+        ev = rng.randint(3)
+        i, j = rng.randint(n, size=2)
+        if ev == 0:  # node churn: every incident link drops
+            adj[i, :] = 0.0
+            adj[:, i] = 0.0
+        elif ev == 1 and i != j:  # symmetric link removal
+            adj[i, j] = adj[j, i] = 0.0
+        elif i != j:  # symmetric link addition
+            adj[i, j] = adj[j, i] = 1.0
+        net = dataclasses.replace(net, adj=jnp.asarray(adj))
+        cache = hop_bound_cache(net, cache)
+        cold = hop_bound_cache(net)
+        assert np.array_equal(cache.adj, cold.adj)
+        assert np.array_equal(cache.dist, cold.dist)
+        assert cache.hop_bound == cold.hop_bound
+    # an unchanged adjacency short-circuits: no sweeps, same answer
+    again = hop_bound_cache(net, cache)
+    assert again.sweeps == 0
+    assert np.array_equal(again.dist, cache.dist)
+
+
+def test_hop_bound_cache_pallas_path_matches():
+    """The warm re-closure through the Pallas matmul (interpret) agrees
+    with the jnp path bitwise."""
+    from repro.core import hop_bound_cache, random_connected
+
+    p = random_connected(16, 5, seed=3)
+    c0 = hop_bound_cache(p.net)
+    adj = np.asarray(p.net.adj).copy()
+    adj[0, :] = 0.0
+    adj[:, 0] = 0.0
+    net = dataclasses.replace(p.net, adj=jnp.asarray(adj))
+    warm_jnp = hop_bound_cache(net, c0)
+    warm_pl = hop_bound_cache(net, c0, use_pallas=True, interpret=True)
+    assert np.array_equal(warm_jnp.dist, warm_pl.dist)
+    assert warm_jnp.hop_bound == warm_pl.hop_bound
+
+
+# ---------------------------------------------------------------------------
+# big-V interpret-mode parity (CI kernels smoke: REPRO_BIG_KERNEL_V=1536)
+# ---------------------------------------------------------------------------
+@bigv_only
+def test_bigv_minplus_pallas_matches_blocked():
+    v = BIGV
+    rng = np.random.RandomState(0)
+    w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
+    w[rng.rand(v, v) < 0.6] = 1e18
+    np.fill_diagonal(w, 0.0)
+    got = minplus_matmul_pallas(jnp.asarray(w), jnp.asarray(w), interpret=True)
+    # the blocked path is the bitwise-oracle reference at sizes where the
+    # [V, V, V] broadcast oracle cannot be materialized
+    want = minplus_matmul_blocked(jnp.asarray(w), jnp.asarray(w))
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@bigv_only
+def test_bigv_fused_argmin_values_match_blocked():
+    v = BIGV
+    rng = np.random.RandomState(1)
+    w = rng.uniform(0.1, 5.0, (v, v)).astype(np.float32)
+    w[rng.rand(v, v) < 0.6] = 1e18
+    np.fill_diagonal(w, 0.0)
+    a, b = jnp.asarray(w), jnp.asarray(w)
+    val, nh = minplus_matmul_argmin_pallas(a, b, interpret=True)
+    want = minplus_matmul_blocked(a, b)
+    assert np.array_equal(np.asarray(val), np.asarray(want))
+    # gather parity: the claimed argmin must reproduce the min value
+    idx = np.asarray(nh)
+    picked = np.take_along_axis(w, idx, axis=1) + np.take_along_axis(
+        w, idx, axis=0
+    )  # w[i, k] + w[k, j] at k = idx[i, j]
+    np.testing.assert_array_equal(picked, np.asarray(want))
 
 
 # ---------------------------------------------------------------------------

@@ -2,6 +2,8 @@
 core solver switch): the nilpotency contract (Neumann == LU on loop-free
 forwarding states, including padded phantom rows), kernel/oracle agreement,
 differentiability through custom_linear_solve, and hop-bound plumbing."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -135,6 +137,156 @@ class TestNeumannSubsystem:
         assert got.shape == (2, 37)
         np.testing.assert_allclose(
             np.asarray(got), np.asarray(lu_solve_ref(m, b)), rtol=1e-4, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# K-tiled kernel: V past the single-tile VMEM cap, mixed precision
+# ---------------------------------------------------------------------------
+def _substochastic_batch(rng, n_batch, v, rho=0.9):
+    """Strictly-upper-triangular operators with row sums rho < 1 — nilpotent
+    AND contractive, so truncated hops converge fast at any V."""
+    m = rng.uniform(0.0, 1.0, (n_batch, v, v)).astype(np.float32)
+    m *= np.triu(np.ones((v, v), np.float32), 1)
+    m *= rho / np.maximum(m.sum(-1, keepdims=True), 1e-9)
+    return jnp.asarray(m)
+
+
+class TestKTiledKernel:
+    def test_forced_tiling_matches_single_tile(self):
+        """block_k below V forces the tiled kernel at a size where the
+        single-tile kernel is also available: the two must agree."""
+        rng = np.random.RandomState(21)
+        v = 192
+        m = _substochastic_batch(rng, 2, v)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (2, v)).astype(np.float32))
+        ref = neumann_solve_pallas(m, b, hops=24, interpret=True)
+        for bk in (128, 256):
+            tiled = neumann_solve_pallas(m, b, hops=24, interpret=True, block_k=bk)
+            np.testing.assert_allclose(
+                np.asarray(tiled), np.asarray(ref), rtol=1e-5, atol=1e-5
+            )
+
+    def test_tiled_lane_padding_inert(self):
+        """Ragged V through the tiled path: padded coordinates stay zero
+        and the valid region matches LU."""
+        rng = np.random.RandomState(22)
+        m = _nilpotent_batch(rng, 2, 150)
+        b = jnp.asarray(rng.uniform(0.0, 1.0, (2, 150)).astype(np.float32))
+        got = neumann_solve_pallas(m, b, hops=151, interpret=True, block_k=128)
+        assert got.shape == (2, 150)
+        want = lu_solve_ref(m, b)
+        scale = float(jnp.max(jnp.abs(want)))
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale, atol=1e-5
+        )
+
+    def test_bf16_operands_bounded_error(self):
+        """bf16 W streaming with fp32 accumulation: bounded relative error
+        vs the fp32 path (bf16 has ~3 decimal digits; the accumulator
+        keeps the series sum from drifting)."""
+        rng = np.random.RandomState(23)
+        v = 384
+        m = _substochastic_batch(rng, 2, v)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (2, v)).astype(np.float32))
+        x32 = neumann_solve_pallas(m, b, hops=32, interpret=True, block_k=128)
+        xbf = neumann_solve_pallas(
+            m, b, hops=32, interpret=True, block_k=128,
+            operand_dtype=jnp.bfloat16,
+        )
+        scale = float(jnp.max(jnp.abs(x32))) + 1e-30
+        err = float(jnp.max(jnp.abs(xbf - x32))) / scale
+        assert err < 2e-2, err
+        assert err > 0.0  # bf16 genuinely engaged (not silently fp32)
+
+    def test_bf16_preserves_exact_zeros(self):
+        """The zero-padding inertness argument requires bf16 casts to keep
+        exact zeros: decoupled coordinates must come out exactly 0.0."""
+        rng = np.random.RandomState(24)
+        v = 160
+        m = np.array(_substochastic_batch(rng, 1, v))
+        m[:, v // 2 :, :] = 0.0  # no coupling into the upper half...
+        b = rng.uniform(0.5, 1.0, (1, v)).astype(np.float32)
+        b[:, v // 2 :] = 0.0  # ...and no source there either
+        got = neumann_solve_pallas(
+            jnp.asarray(m), jnp.asarray(b), hops=16, interpret=True,
+            block_k=128, operand_dtype=jnp.bfloat16,
+        )
+        assert float(jnp.max(jnp.abs(got[:, v // 2 :]))) == 0.0
+
+    def test_auto_tiling_past_vmem_cap(self):
+        """V > MAX_VMEM_V dispatches to the tiled kernel automatically and
+        matches the XLA propagation loop."""
+        from repro.kernels.neumann.kernel import MAX_VMEM_V
+        from repro.kernels.neumann.ops import _propagate_xla
+
+        rng = np.random.RandomState(25)
+        v = MAX_VMEM_V + 128
+        m = _substochastic_batch(rng, 1, v)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (1, v)).astype(np.float32))
+        got = neumann_solve_pallas(m, b, hops=40, interpret=True)
+        want = _propagate_xla(m, b, 40, 1e-6)
+        scale = float(jnp.max(jnp.abs(want))) + 1e-30
+        err = float(jnp.max(jnp.abs(got - want))) / scale
+        assert err < 1e-5, err
+
+    def test_nilpotency_contract_past_vmem_cap(self):
+        """The PR's acceptance bar: a provably nilpotent operator at
+        V > MAX_VMEM_V solves through the K-tiled kernel to LU accuracy."""
+        rng = np.random.RandomState(26)
+        v = 1280
+        m = rng.uniform(0.0, 1.0, (1, v, v)).astype(np.float32)
+        m *= np.triu(np.ones((v, v), np.float32), 1)
+        m *= rng.rand(1, v, v) < (4.0 / v)  # sparse: finite, reachable sum
+        mj, bj = jnp.asarray(m), jnp.asarray(
+            rng.uniform(0.0, 1.0, (1, v)).astype(np.float32)
+        )
+        got = neumann_solve_pallas(mj, bj, hops=64, interpret=True)
+        want = lu_solve_ref(mj, bj)
+        scale = float(jnp.max(jnp.abs(want))) + 1e-30
+        err = float(jnp.max(jnp.abs(got - want))) / scale
+        assert err < 1e-5, err
+
+    def test_block_k_must_be_lane_multiple(self):
+        rng = np.random.RandomState(27)
+        m = _substochastic_batch(rng, 1, 64)
+        b = jnp.asarray(rng.uniform(0.0, 1.0, (1, 64)).astype(np.float32))
+        with pytest.raises(ValueError, match="multiple"):
+            neumann_solve_pallas(m, b, hops=4, interpret=True, block_k=100)
+
+    @pytest.mark.skipif(
+        int(os.environ.get("REPRO_BIG_KERNEL_V", "0")) < 1,
+        reason="set REPRO_BIG_KERNEL_V to run the big-V parity sweeps",
+    )
+    def test_bigv_tiled_matches_xla(self):
+        """CI kernels smoke: the K-tiled kernel at REPRO_BIG_KERNEL_V
+        (1536 in CI — past MAX_VMEM_V) vs the XLA propagation loop."""
+        from repro.kernels.neumann.ops import _propagate_xla
+
+        rng = np.random.RandomState(29)
+        v = int(os.environ["REPRO_BIG_KERNEL_V"])
+        m = _substochastic_batch(rng, 1, v)
+        b = jnp.asarray(rng.uniform(0.0, 2.0, (1, v)).astype(np.float32))
+        got = neumann_solve_pallas(m, b, hops=32, interpret=True)
+        want = _propagate_xla(m, b, 32, 1e-6)
+        scale = float(jnp.max(jnp.abs(want))) + 1e-30
+        err = float(jnp.max(jnp.abs(got - want))) / scale
+        assert err < 1e-5, err
+
+    def test_tiled_through_neumann_solve_wrapper(self):
+        """block_k/operand_dtype thread through the public wrapper (and its
+        custom_linear_solve) without disturbing the solution."""
+        rng = np.random.RandomState(28)
+        v = 96
+        m = _nilpotent_batch(rng, 2, v)
+        b = jnp.asarray(rng.uniform(0.0, 1.0, (2, v)).astype(np.float32))
+        got = neumann_solve(
+            m, b, hops=v + 1, use_pallas=True, interpret=True, block_k=128
+        )
+        want = lu_solve_ref(m, b)
+        scale = float(jnp.max(jnp.abs(want)))
+        np.testing.assert_allclose(
+            np.asarray(got) / scale, np.asarray(want) / scale, atol=1e-5
         )
 
 
