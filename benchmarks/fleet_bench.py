@@ -484,6 +484,28 @@ def _bench_chaos(print_fn) -> dict:
     }
 
 
+def _bench_pareto(print_fn) -> dict:
+    """Section 9 (split-point Pareto search, DESIGN.md section 17).
+
+    A compact end-to-end split search — candidate enumeration, mixed-P
+    phantom padding, ONE batched solve, front extraction with dominance
+    hard gates — so BENCH_fleet.json tracks the fleet engine's first
+    at-scale batch consumer (`candidates_per_s`, higher is better) next to
+    the engine sections it stresses. The full-scale search over the whole
+    zoo lives in BENCH_pareto.json (benchmarks/pareto_bench.py)."""
+    from benchmarks.pareto_bench import sweep_section
+
+    return sweep_section(
+        print_fn,
+        archs=("qwen1.5-0.5b", "hymba-1.5b"),
+        topologies=("iot",),
+        max_per_p=4 if _SMALL else 8,
+        m_max=SOLVE_KW["m_max"],
+        t_phi=SOLVE_KW["t_phi"],
+        min_per_cell=20 if _SMALL else 50,
+    )
+
+
 def run(print_fn=print, solver: str = "neumann") -> dict:
     out = {"engine": _bench_batched_vs_sequential(print_fn, solver)}
     out["early_exit"] = _bench_early_exit(print_fn)
@@ -493,6 +515,7 @@ def run(print_fn=print, solver: str = "neumann") -> dict:
     out["shard_axis"] = _bench_shard_axis(print_fn)
     out["obs"] = _bench_obs(print_fn)
     out["chaos"] = _bench_chaos(print_fn)
+    out["pareto"] = _bench_pareto(print_fn)
     return out
 
 

@@ -1,0 +1,159 @@
+"""Split-point Pareto search benchmark (DESIGN.md section 17).
+
+Section 1 (enumeration): the candidate generator over the full 12-config
+zoo — every architecture must emit cut sets at all depths P = 1..4 with the
+full enumeration space accounted (subsampling is reported, never silent),
+and the zoo must include interleaved hybrids (the per-layer-type FLOPs
+accounting that PR 9's bugfix introduced).
+
+Section 2 (sweep throughput): the end-to-end search — enumerate, normalize,
+build one problem per candidate x (topology, load, eta), solve ALL of them
+as ONE batched `solve_fleet` call through mixed-P phantom-stage padding,
+and extract dominated-point-filtered latency/compute/egress fronts. This is
+the first consumer that actually demands the fleet engine's batch
+throughput at scale; `candidates_per_s` (trend-linted, higher is better on
+comparable hardware) is the sustained candidate-evaluation rate including
+enumeration, padding, solving, and front extraction.
+
+Checks enforced:
+  * all 12 zoo configs enumerate candidates at every depth P = 1..4
+  * >= 100 mixed-P candidates solved per (topology, load) cell at full
+    scale (>= 20 under SCALE_SMALL) in one solve_fleet call
+  * every (arch, topology, load) cell has a non-empty finite front and
+    dominated-point filtering actually filtered (`check_fronts`)
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from repro.configs import ZOO, get_config
+from repro.partition.pareto import check_fronts, sweep_zoo
+from repro.partition.profile import enumerate_candidates
+
+_SMALL = bool(os.environ.get("SCALE_SMALL"))
+
+
+def _bench_enumeration(print_fn) -> dict:
+    per_arch = {}
+    interleaved = 0
+    for arch in ZOO:
+        cfg = get_config(arch)
+        cands, possible = enumerate_candidates(
+            cfg, seq_len=256, max_per_p=16
+        )
+        depths = sorted({c.n_parts for c in cands})
+        assert depths == [1, 2, 3, 4], (arch, depths)
+        if cfg.family == "hybrid" and cfg.hybrid_attn_period >= 1:
+            interleaved += 1
+        per_arch[arch] = {"candidates": len(cands), "possible": possible}
+    assert len(per_arch) == 12, f"zoo is {len(per_arch)} configs, want 12"
+    assert interleaved >= 2, "zoo lost its interleaved hybrids"
+    total = sum(v["candidates"] for v in per_arch.values())
+    possible = sum(v["possible"] for v in per_arch.values())
+    print_fn(
+        f"pareto,enumeration archs={len(per_arch)} candidates={total} "
+        f"of {possible} cut sets (interleaved hybrids: {interleaved})"
+    )
+    return {
+        "archs": len(per_arch),
+        "candidates": total,
+        "possible": possible,
+        "interleaved_hybrids": interleaved,
+        "per_arch": per_arch,
+    }
+
+
+def sweep_section(
+    print_fn,
+    *,
+    archs,
+    topologies,
+    loads=(1.0,),
+    etas=(0.5,),
+    max_per_p,
+    m_max,
+    t_phi,
+    seq_len=128,
+    min_per_cell,
+    shard=False,
+) -> dict:
+    """One timed end-to-end sweep + the front hard gates. Shared with
+    fleet_bench's pareto section so both persist the same shape of record."""
+    t0 = time.time()
+    report = sweep_zoo(
+        archs=archs,
+        topologies=topologies,
+        loads=loads,
+        etas=etas,
+        max_per_p=max_per_p,
+        m_max=m_max,
+        t_phi=t_phi,
+        seq_len=seq_len,
+        round_to=8,
+        shard=shard,
+    )
+    wall = time.time() - t0
+    check_fronts(report)
+    per_cell = report["candidates_per_topo_load"]
+    assert per_cell >= min_per_cell, (
+        f"pareto: {per_cell} candidates per (topology, load) cell "
+        f"< required {min_per_cell}"
+    )
+    fronts = [c["front_size"] for c in report["cells"]]
+    dominated = sum(c["n_dominated"] for c in report["cells"])
+    rate = report["n_instances"] / wall
+    print_fn(
+        f"pareto,sweep B={report['n_instances']} "
+        f"({per_cell}/cell over {len(report['cells'])} fronts) "
+        f"rounds={report['rounds']} wall={wall:.1f}s "
+        f"{rate:.1f} cand/s front_sizes={min(fronts)}-{max(fronts)} "
+        f"dominated={dominated}"
+    )
+    return {
+        "instances": report["n_instances"],
+        "candidates_per_topo_load": per_cell,
+        "cells": len(report["cells"]),
+        "rounds_executed": report["rounds"],
+        "front_size_min": min(fronts),
+        "front_size_max": max(fronts),
+        "dominated_filtered": dominated,
+        "cut_sets_possible": report["cut_sets_possible"],
+        "cut_sets_dropped": report["cut_sets_dropped"],
+        "pad_overhead": report["pad_overhead_fraction"],
+        "candidates_per_s": round(rate, 3),
+    }
+
+
+def run(print_fn=print) -> dict:
+    out = {"enumeration": _bench_enumeration(print_fn)}
+    if _SMALL:
+        out["sweep"] = sweep_section(
+            print_fn,
+            archs=("qwen1.5-0.5b", "mamba2-370m", "nemotron-h-8b"),
+            topologies=("iot",),
+            max_per_p=8,
+            m_max=3,
+            t_phi=3,
+            min_per_cell=20,
+        )
+    else:
+        out["sweep"] = sweep_section(
+            print_fn,
+            archs=None,  # the full 12-config zoo
+            topologies=("iot", "mesh"),
+            max_per_p=8,
+            m_max=6,
+            t_phi=5,
+            min_per_cell=100,
+        )
+    return out
+
+
+def main() -> int:
+    run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

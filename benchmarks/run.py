@@ -45,6 +45,7 @@ from benchmarks import (
     fig5_tradeoff,
     fleet_bench,
     kernel_bench,
+    pareto_bench,
     roofline,
     scale_control_plane,
     serve_bench,
@@ -63,6 +64,7 @@ BENCHES = {
     "kernels": kernel_bench.run,       # Pallas kernels vs oracles
     "scale": scale_control_plane.run,  # beyond-paper: fleet-scale control
     "fleet": fleet_bench.run,          # batched-vs-sequential + solver axis
+    "pareto": pareto_bench.run,        # split-point Pareto search (DESIGN 17)
     "serve": serve_bench.run,          # chaos control loop (epochs/sec, p95)
     "roofline": roofline.run,          # informational; needs dry-run artifacts
 }
@@ -141,6 +143,11 @@ def trend_metrics(result, prefix: str = "") -> dict:
         out[path] = (float(result), "lower", True)
     elif "per_round" in path or key.endswith(("_ms", "_us")):
         out[path] = (float(result), "lower", False)
+    elif key.endswith("_per_s"):
+        # Throughput rates (candidates/sec, epochs/sec): higher is better,
+        # but absolute rates are hardware-bound — compared only under
+        # --trend-metrics all (the pareto CI job uses a generous tol).
+        out[path] = (float(result), "higher", False)
     return out
 
 

@@ -62,9 +62,9 @@ profiles = [profile_arch(get_config(a), seq_len=128) for a in ARCHS]
 # (raw video in, small features out: L0 >> L1) — ALT should SPLIT it:
 # partition 1 compresses at the edge, partition 2 classifies upstream.
 profiles.append(ArchProfile(
-    arch="perception-cnn", split_layer=8, n_layers_total=32, seq_len=1,
-    L0_bytes=2e6, L1_bytes=1.5e5, L2_bytes=1e4,
-    w1_flops=3e9, w2_flops=60e9,
+    arch="perception-cnn", splits=(8,), n_layers_total=32, seq_len=1,
+    L_bytes=(2e6, 1.5e5, 1e4),
+    w_flops=(3e9, 60e9),
 ))
 ARCHS = ARCHS + ["perception-cnn"]
 src = np.array([0, 1, 2, 3, 0])  # one service per device + video on dev0

@@ -1,1 +1,1 @@
-from .registry import ARCHS, get_config, reduced_config  # noqa: F401
+from .registry import ARCHS, ZOO, get_config, reduced_config  # noqa: F401

@@ -19,13 +19,25 @@ _MODULES = {
     "hymba-1.5b": "repro.configs.hymba_1_5b",
 }
 
+# Profile-only additions: interleaved hybrids whose layer mix the partition
+# bridge can cost (hybrid_attn_period) but the executable substrate does not
+# implement (init_params raises). They complete the 12-config zoo the
+# split-point Pareto search sweeps (DESIGN.md section 17) without entering
+# ARCHS — the dry-run / smoke matrices iterate executable archs only.
+_PROFILE_ONLY = {
+    "nemotron-h-8b": "repro.configs.nemotron_h_8b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
 ARCHS = tuple(_MODULES)
+ZOO = ARCHS + tuple(_PROFILE_ONLY)
 
 
 def get_config(name: str) -> ModelConfig:
-    if name not in _MODULES:
-        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
-    return importlib.import_module(_MODULES[name]).CONFIG
+    module = _MODULES.get(name) or _PROFILE_ONLY.get(name)
+    if module is None:
+        raise KeyError(f"unknown arch {name!r}; available: {ZOO}")
+    return importlib.import_module(module).CONFIG
 
 
 def reduced_config(name: str) -> ModelConfig:

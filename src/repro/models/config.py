@@ -48,6 +48,12 @@ class ModelConfig:
     ssm_expand: int = 2
     conv_width: int = 4
     ssm_chunk: int = 128
+    # hybrid layer mix: 0 = parallel hybrid (hymba — every block computes the
+    # attention AND SSM branches); p >= 1 = interleaved — only every p-th
+    # block (layer % p == p - 1) is an attention block, the rest are
+    # SSM-only. Interleaved configs are profile-only substrate-wise
+    # (init_params raises); per-layer costing lives in partition/profile.py.
+    hybrid_attn_period: int = 0
     # encdec
     n_dec_layers: int = 0
     # modality frontend stub ("none" | "patch" | "frames")
@@ -80,6 +86,26 @@ class ModelConfig:
     def attends(self) -> bool:
         return self.family in ("dense", "moe", "hybrid", "encdec")
 
+    def layer_mix(self, layer: int) -> tuple[bool, bool]:
+        """(has_attention, has_ssm) for block `layer` (0-indexed).
+
+        Uniform-stack families return the same pair for every layer; an
+        interleaved hybrid (hybrid_attn_period >= 1) alternates block types,
+        so per-layer FLOP/param accounting must ask per layer."""
+        if self.family == "hybrid" and self.hybrid_attn_period >= 1:
+            p = self.hybrid_attn_period
+            is_attn = layer % p == p - 1
+            return is_attn, not is_attn
+        return self.attends, self.family in ("ssm", "hybrid")
+
+    def n_attn_layers(self) -> int:
+        """How many blocks carry an attention branch."""
+        if self.family == "hybrid" and self.hybrid_attn_period >= 1:
+            return sum(
+                1 for l in range(self.n_layers) if self.layer_mix(l)[0]
+            )
+        return self.n_layers if self.attends else 0
+
     @property
     def subquadratic(self) -> bool:
         """Can this arch decode at 500k context (constant/bounded state)?"""
@@ -97,26 +123,33 @@ class ModelConfig:
             total += d * v
         if self.frontend != "none":
             total += self.frontend_dim * d
-        per_layer = 0
+        attn_p = mix_p = ssm_p = 0
         if self.family in ("dense", "moe", "hybrid", "encdec"):
             h, kv, hd = self.n_heads, self.n_kv_heads, self.head_dim
-            per_layer += d * h * hd + 2 * d * kv * hd + h * hd * d  # qkvo
+            attn_p += d * h * hd + 2 * d * kv * hd + h * hd * d  # qkvo
         if self.family in ("dense", "hybrid", "encdec"):
             mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
-            per_layer += mult * d * self.d_ff
+            mix_p += mult * d * self.d_ff
         if self.family == "moe":
             mult = 3 if self.mlp_act in ("swiglu", "geglu") else 2
-            per_layer += d * self.n_experts  # router
-            per_layer += self.n_experts * mult * d * self.moe_d_ff
+            mix_p += d * self.n_experts  # router
+            mix_p += self.n_experts * mult * d * self.moe_d_ff
             if self.shared_d_ff:
-                per_layer += mult * d * self.shared_d_ff
+                mix_p += mult * d * self.shared_d_ff
         if self.family in ("ssm", "hybrid"):
             din, n, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
-            per_layer += d * (2 * din + 2 * n + nh)  # in_proj (z,x,B,C,dt)
-            per_layer += self.conv_width * (din + 2 * n)  # conv
-            per_layer += 3 * nh  # A_log, D, dt_bias
-            per_layer += din * d  # out_proj
-        total += self.n_layers * per_layer
+            ssm_p += d * (2 * din + 2 * n + nh)  # in_proj (z,x,B,C,dt)
+            ssm_p += self.conv_width * (din + 2 * n)  # conv
+            ssm_p += 3 * nh  # A_log, D, dt_bias
+            ssm_p += din * d  # out_proj
+        if self.family == "hybrid" and self.hybrid_attn_period >= 1:
+            # Interleaved: attention params only on attention blocks, SSM
+            # params only on the rest; MLP in every block.
+            na = self.n_attn_layers()
+            total += na * attn_p + (self.n_layers - na) * ssm_p
+            total += self.n_layers * mix_p
+        else:
+            total += self.n_layers * (attn_p + mix_p + ssm_p)
         if self.family == "encdec":
             # decoder: self-attn + cross-attn + mlp
             h, kv, hd = self.n_heads, self.n_kv_heads, self.head_dim

@@ -278,6 +278,14 @@ def _stack_decode(blocks, caches, x, pos, cfg: ModelConfig, kind: str):
 # public API
 # ---------------------------------------------------------------------------
 def init_params(cfg: ModelConfig, rng) -> Params:
+    if cfg.family == "hybrid" and cfg.hybrid_attn_period >= 1:
+        raise ValueError(
+            f"init_params: {cfg.name!r} declares an interleaved hybrid "
+            f"layer mix (hybrid_attn_period={cfg.hybrid_attn_period}) but "
+            "the executable substrate only implements parallel hybrid "
+            "blocks (attention + SSM every layer); interleaved configs are "
+            "profile-only — see partition/profile.py"
+        )
     k_embed, k_blocks, k_dec, k_norm = jax.random.split(rng, 4)
     params = {"embed": L.init_embed(k_embed, cfg), "final_norm": L.init_norm(cfg.d_model)}
     kind = _block_kind(cfg)

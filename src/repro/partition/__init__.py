@@ -1,2 +1,9 @@
-from .profile import ArchProfile, apps_from_profiles, flops_per_token_layer, profile_arch  # noqa: F401
+from .profile import (  # noqa: F401
+    ArchProfile,
+    apps_from_profiles,
+    enumerate_candidates,
+    flops_per_token_layer,
+    profile_arch,
+)
+from .pareto import check_fronts, pareto_front, sweep_zoo  # noqa: F401
 from .executor import run_partition, split_params  # noqa: F401

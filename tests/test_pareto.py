@@ -1,0 +1,535 @@
+"""Split-point Pareto search + the profile-bridge fixes it builds on (PR 9).
+
+Covers DESIGN.md section 17 end to end:
+  * bitwise P=2 back-compat pin — the candidate-set path at the legacy
+    default split reproduces the pre-split-search ArchProfile numbers
+    exactly, for every pre-existing zoo config (verbatim port of the old
+    arithmetic lives in _legacy_profile below);
+  * the profile_arch split-validation bugfixes (encdec honored, named
+    ValueErrors, dead unembed term gone);
+  * per-layer-type FLOPs accounting for interleaved hybrids, cross-checked
+    against launch.hlo_cost on real lowered models;
+  * apps_from_profiles mixed-depth padding + named-ValueError validation;
+  * pareto_front dominance filtering and the sweep_zoo end-to-end report
+    contract (check_fronts);
+  * hypothesis property: every enumerated candidate yields finite,
+    conservation-satisfying solve_fleet results through mixed-P padding.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ZOO, get_config, reduced_config
+from repro.core.scenarios import SCENARIOS
+from repro.core.structs import CostModel, Problem
+from repro.fleet import solve_fleet
+from repro.partition.pareto import check_fronts, pareto_front, sweep_zoo
+from repro.partition.profile import (
+    ArchProfile,
+    apps_from_profiles,
+    enumerate_candidates,
+    flops_per_token_layer,
+    layer_flops_table,
+    profile_arch,
+    total_profile_layers,
+)
+from tests._optional_deps import given, settings, st
+
+SEQ = 128
+N_OUT = 32
+
+
+# ---------------------------------------------------------------------------
+# 1. bitwise P=2 back-compat pin (verbatim port of the legacy arithmetic)
+# ---------------------------------------------------------------------------
+def _legacy_profile(cfg, seq_len, n_out_tokens):
+    """The pre-PR-9 profile_arch arithmetic, ported verbatim (minus the dead
+    `2.0 * seq_len * cfg.vocab * 0` encoder-unembed term, which is + 0.0).
+
+    Returns (split_layer, L0, L1, L2, w1, w2) for the legacy default cut."""
+    if cfg.family == "encdec":
+        split_layer = cfg.n_layers
+        l0 = seq_len * (cfg.frontend_dim * 2.0 if cfg.frontend != "none" else 4.0)
+        l1 = seq_len * cfg.d_model * 2.0
+        l2 = n_out_tokens * 4.0
+        w1 = seq_len * sum(
+            flops_per_token_layer(cfg, seq_len) for _ in range(cfg.n_layers)
+        )
+        w2 = seq_len * sum(
+            flops_per_token_layer(cfg, seq_len, decoder=True)
+            for _ in range(cfg.n_dec_layers)
+        )
+        w2 += 2.0 * n_out_tokens * cfg.d_model * cfg.vocab
+        return split_layer, l0, l1, l2, w1, w2
+    n_l = cfg.n_layers
+    split_layer = max(1, n_l // 4)
+    per_layer = flops_per_token_layer(cfg, seq_len)
+    l0 = seq_len * (cfg.frontend_dim * 2.0 if cfg.frontend != "none" else 4.0)
+    l1 = seq_len * cfg.d_model * 2.0
+    l2 = n_out_tokens * 4.0
+    w_unembed = 2.0 * seq_len * cfg.d_model * cfg.vocab
+    w1 = seq_len * per_layer * split_layer + 0.0
+    w2 = seq_len * per_layer * (n_l - split_layer) + w_unembed
+    return split_layer, l0, l1, l2, w1, w2
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_p2_default_profile_bitwise_pin(arch):
+    """New generalized path at the legacy default split == old numbers,
+    bit for bit, for all pre-existing zoo configs."""
+    cfg = get_config(arch)
+    prof = profile_arch(cfg, seq_len=SEQ, n_out_tokens=N_OUT)
+    k, l0, l1, l2, w1, w2 = _legacy_profile(cfg, SEQ, N_OUT)
+    assert prof.n_parts == 2
+    assert prof.split_layer == k
+    assert prof.L0_bytes == l0
+    assert prof.L1_bytes == l1
+    assert prof.L2_bytes == l2
+    assert prof.w1_flops == w1
+    assert prof.w2_flops == w2
+    assert prof.L == (l0, l1, l2)
+    assert prof.w == (w1, w2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_p2_apps_bitwise_pin(arch):
+    """apps_from_profiles at uniform P=2 reproduces the legacy L/w arrays
+    (the old code built [L0, L1, L2] / [w1, w2] directly)."""
+    cfg = get_config(arch)
+    prof = profile_arch(cfg, seq_len=SEQ, n_out_tokens=N_OUT)
+    src = np.array([0, 1, 2])
+    lam = np.array([0.5, 1.0, 2.0])
+    apps = apps_from_profiles(
+        [prof] * 3, src, src, lam, byte_scale=1e-6, flop_scale=1e-9
+    )
+    _, l0, l1, l2, w1, w2 = _legacy_profile(cfg, SEQ, N_OUT)
+    legacy_L = (np.array([[l0, l1, l2]] * 3) * 1e-6).astype(np.float32)
+    legacy_w = (np.array([[w1, w2]] * 3) * 1e-9).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(apps.L), legacy_L)
+    np.testing.assert_array_equal(np.asarray(apps.w), legacy_w)
+    np.testing.assert_array_equal(np.asarray(apps.parts), [2, 2, 2])
+
+
+# ---------------------------------------------------------------------------
+# 2. profile_arch split validation (the satellite-1 bugfixes)
+# ---------------------------------------------------------------------------
+class TestSplitValidation:
+    def test_both_split_args_raise(self):
+        cfg = get_config("qwen1.5-0.5b")
+        with pytest.raises(ValueError, match="not both"):
+            profile_arch(cfg, split=3, splits=(3,))
+
+    @pytest.mark.parametrize("bad", [0, -2, 10**6])
+    def test_out_of_range_raises(self, bad):
+        cfg = get_config("qwen1.5-0.5b")
+        with pytest.raises(ValueError, match="out of range"):
+            profile_arch(cfg, split=bad)
+
+    def test_descending_splits_raise(self):
+        cfg = get_config("gemma-2b")
+        with pytest.raises(ValueError, match="strictly ascending"):
+            profile_arch(cfg, splits=(5, 5))
+        with pytest.raises(ValueError, match="strictly ascending"):
+            profile_arch(cfg, splits=(7, 3))
+
+    def test_encdec_honors_split(self):
+        """The historical code silently ignored split= for encdec; now any
+        interior boundary is legal and actually moves the cut."""
+        cfg = get_config("seamless-m4t-medium")
+        inside_enc = profile_arch(cfg, seq_len=SEQ, split=2)
+        assert inside_enc.split_layer == 2
+        boundary = profile_arch(cfg, seq_len=SEQ, split=cfg.n_layers)
+        default = profile_arch(cfg, seq_len=SEQ)
+        assert boundary == default  # explicit boundary == legacy default
+        # a cut INSIDE the decoder ships memory + decoder hiddens (2x)
+        inside_dec = profile_arch(cfg, seq_len=SEQ, split=cfg.n_layers + 1)
+        assert inside_dec.L1_bytes == 2.0 * boundary.L1_bytes
+        with pytest.raises(ValueError, match="encoder/decoder boundary"):
+            profile_arch(cfg, split=total_profile_layers(cfg))
+
+    def test_empty_splits_is_unsplit_chain(self):
+        cfg = get_config("mamba2-370m")
+        prof = profile_arch(cfg, seq_len=SEQ, splits=())
+        assert prof.n_parts == 1
+        assert len(prof.L_bytes) == 2
+        default = profile_arch(cfg, seq_len=SEQ)
+        assert prof.w_flops[0] == pytest.approx(sum(default.w_flops), rel=1e-12)
+
+    def test_compression_ratio_subbyte_and_zero(self):
+        """Sub-byte L0 must not be clamped to 1.0 (old max(L0, 1.0) bug);
+        a zero L0 raises a named error instead of silently dividing."""
+        p = ArchProfile(
+            arch="x", splits=(1,), n_layers_total=2, seq_len=1,
+            L_bytes=(0.5, 1.0, 4.0), w_flops=(1.0, 1.0),
+        )
+        assert p.compression_ratio() == 2.0
+        z = dataclasses.replace(p, L_bytes=(0.0, 1.0, 4.0))
+        with pytest.raises(ValueError, match="compression_ratio"):
+            z.compression_ratio()
+
+
+# ---------------------------------------------------------------------------
+# 3. interleaved-hybrid per-layer-type accounting (the satellite-2 bugfix)
+# ---------------------------------------------------------------------------
+class TestInterleavedHybrids:
+    @pytest.mark.parametrize("arch", ["nemotron-h-8b", "zamba2-2.7b"])
+    def test_layer_mix_and_counts(self, arch):
+        cfg = get_config(arch)
+        p = cfg.hybrid_attn_period
+        assert p >= 1
+        na = cfg.n_attn_layers()
+        assert na == sum(
+            1 for l in range(cfg.n_layers) if l % p == p - 1
+        )
+        assert 0 < na < cfg.n_layers  # genuinely mixed stack
+        for l in range(cfg.n_layers):
+            has_attn, has_ssm = cfg.layer_mix(l)
+            assert has_attn != has_ssm  # interleaved: one branch per block
+
+    def test_uniform_table_unchanged_for_parallel_hybrid(self):
+        """hymba (hybrid_attn_period=0) keeps the every-block-has-both
+        accounting — that matches its actual model code."""
+        cfg = get_config("hymba-1.5b")
+        table = layer_flops_table(cfg, SEQ)
+        assert len(set(table)) == 1
+        assert table[0] == flops_per_token_layer(cfg, SEQ)
+
+    def test_layer_none_raises_for_interleaved(self):
+        cfg = get_config("nemotron-h-8b")
+        with pytest.raises(ValueError, match="interleaved"):
+            flops_per_token_layer(cfg, SEQ)
+
+    @pytest.mark.parametrize("arch", ["nemotron-h-8b", "zamba2-2.7b"])
+    def test_two_block_costs_and_profile_total(self, arch):
+        """The table has exactly the attention-block and SSM-block costs,
+        and the profile total is their count-weighted sum + unembed —
+        NOT n_layers * (attn + ssm) as the old uniform bug would give."""
+        cfg = get_config(arch)
+        table = layer_flops_table(cfg, SEQ)
+        costs = sorted(set(table))
+        assert len(costs) == 2
+        na = cfg.n_attn_layers()
+        attn_cost = flops_per_token_layer(cfg, SEQ, layer=cfg.hybrid_attn_period - 1)
+        ssm_cost = flops_per_token_layer(cfg, SEQ, layer=0)
+        assert sorted({attn_cost, ssm_cost}) == costs
+        prof = profile_arch(cfg, seq_len=SEQ, n_out_tokens=N_OUT)
+        unembed = 2.0 * SEQ * cfg.d_model * cfg.vocab
+        expect = SEQ * (na * attn_cost + (cfg.n_layers - na) * ssm_cost) + unembed
+        assert sum(prof.w_flops) == pytest.approx(expect, rel=1e-12)
+        # the old uniform bug charged EVERY block both branches (the
+        # parallel-hybrid reading) — the interleaved total must be lower
+        parallel = dataclasses.replace(cfg, hybrid_attn_period=0)
+        buggy = SEQ * cfg.n_layers * flops_per_token_layer(parallel, SEQ)
+        assert sum(prof.w_flops) < buggy + unembed
+
+    def test_init_params_rejects_interleaved(self):
+        from jax import random
+        from repro.models import init_params
+
+        cfg = reduced_config("nemotron-h-8b")
+        assert cfg.hybrid_attn_period >= 1  # survives reduction
+        with pytest.raises(ValueError, match="profile-only"):
+            init_params(cfg, random.PRNGKey(0))
+
+    def test_n_params_interleaved_below_parallel(self):
+        """Dropping the attention branch from most blocks must shrink the
+        parameter count vs the parallel-hybrid (period=0) reading."""
+        cfg = get_config("nemotron-h-8b")
+        parallel = dataclasses.replace(cfg, hybrid_attn_period=0)
+        assert cfg.n_params() < parallel.n_params()
+
+
+# ---------------------------------------------------------------------------
+# 4. HLO cross-check: analytic profile FLOPs vs launch.hlo_cost (satellite 2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-370m", "hymba-1.5b"])
+def test_profile_flops_vs_hlo_cost(arch):
+    """sum(w_flops) for a reduced config within 2x of the dot-FLOPs the
+    compiled logits_fn actually contains (same gate as test_dryrun's
+    whole-model check; attention masking / non-dot SSM ops are the gap)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch import hlo_cost
+    from repro.models import init_params, logits_fn
+
+    seq = 64
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((1, seq), jnp.int32)}
+    hlo = (
+        jax.jit(lambda p, b: logits_fn(cfg, p, b))
+        .lower(params, batch)
+        .compile()
+        .as_text()
+    )
+    measured = hlo_cost.analyze(hlo)["flops"]
+    analytic = sum(profile_arch(cfg, seq_len=seq).w_flops)
+    ratio = measured / analytic
+    assert 0.5 < ratio < 2.0, (arch, ratio, measured, analytic)
+
+
+# ---------------------------------------------------------------------------
+# 5. apps_from_profiles: mixed-depth padding + named validation (satellite 3)
+# ---------------------------------------------------------------------------
+class TestAppsFromProfiles:
+    def test_mixed_depth_padding(self):
+        cfg = get_config("gemma-2b")
+        p1 = profile_arch(cfg, seq_len=SEQ, splits=())
+        p2 = profile_arch(cfg, seq_len=SEQ)
+        p4 = profile_arch(cfg, seq_len=SEQ, splits=(4, 9, 14))
+        src = np.array([0, 1, 2])
+        apps = apps_from_profiles([p1, p2, p4], src, src, np.ones(3))
+        assert apps.L.shape == (3, 5)  # K = max P + 1
+        assert apps.w.shape == (3, 4)
+        np.testing.assert_array_equal(np.asarray(apps.parts), [1, 2, 4])
+        L = np.asarray(apps.L, np.float64)
+        w = np.asarray(apps.w, np.float64)
+        # final packet sits at index parts; phantom stages beyond are 0
+        assert L[0, 1] == np.float32(p1.L_bytes[-1])
+        assert (L[0, 2:] == 0).all() and (w[0, 1:] == 0).all()
+        assert L[1, 2] == np.float32(p2.L_bytes[-1])
+        assert (L[1, 3:] == 0).all() and (w[1, 2:] == 0).all()
+        np.testing.assert_array_equal(
+            w[2], np.asarray(p4.w_flops, np.float32).astype(np.float64)
+        )
+
+    def test_empty_profiles_raise(self):
+        with pytest.raises(ValueError, match="empty profile list"):
+            apps_from_profiles([], np.array([]), np.array([]), np.array([]))
+
+    def test_length_mismatch_raises_named(self):
+        cfg = get_config("qwen1.5-0.5b")
+        p = profile_arch(cfg, seq_len=SEQ)
+        with pytest.raises(ValueError, match="2 profiles.*src has 1"):
+            apps_from_profiles(
+                [p, p], np.array([0]), np.array([0, 1]), np.array([1.0, 1.0])
+            )
+
+    @pytest.mark.parametrize("kw", [{"byte_scale": 0.0},
+                                    {"flop_scale": -1.0},
+                                    {"byte_scale": float("nan")}])
+    def test_bad_scales_raise(self, kw):
+        cfg = get_config("qwen1.5-0.5b")
+        p = profile_arch(cfg, seq_len=SEQ)
+        with pytest.raises(ValueError, match="finite and positive"):
+            apps_from_profiles(
+                [p], np.array([0]), np.array([1]), np.array([1.0]), **kw
+            )
+
+
+# ---------------------------------------------------------------------------
+# 6. candidate enumeration
+# ---------------------------------------------------------------------------
+class TestEnumerateCandidates:
+    def test_counts_and_determinism(self):
+        import math
+
+        cfg = get_config("qwen1.5-0.5b")
+        total = total_profile_layers(cfg)
+        cands, n_possible = enumerate_candidates(
+            cfg, seq_len=SEQ, max_per_p=8
+        )
+        again, _ = enumerate_candidates(cfg, seq_len=SEQ, max_per_p=8)
+        assert cands == again  # fully deterministic
+        assert n_possible == sum(
+            math.comb(total - 1, p - 1) for p in (1, 2, 3, 4)
+        )
+        by_p = {}
+        for c in cands:
+            by_p.setdefault(c.n_parts, []).append(c)
+        assert sorted(by_p) == [1, 2, 3, 4]
+        for p, group in by_p.items():
+            assert len(group) <= 8
+            # endpoints of the lexicographic combination list survive
+            if p >= 2:
+                assert group[0].splits[0] == 1
+                assert group[-1].splits[-1] == total - 1
+
+    def test_total_flops_split_invariant(self):
+        """Every candidate of one arch does the same total work — the
+        normalization in pareto.sweep_zoo depends on this."""
+        for arch in ZOO:
+            cfg = get_config(arch)
+            cands, _ = enumerate_candidates(cfg, seq_len=SEQ, max_per_p=4)
+            totals = {sum(c.w_flops) for c in cands}
+            base = sum(profile_arch(cfg, seq_len=SEQ).w_flops)
+            assert all(
+                abs(t - base) / base < 1e-9 for t in totals
+            ), (arch, totals)
+
+    def test_bad_args_raise(self):
+        cfg = get_config("qwen1.5-0.5b")
+        with pytest.raises(ValueError, match="max_per_p"):
+            enumerate_candidates(cfg, max_per_p=0)
+        with pytest.raises(ValueError, match="partition counts"):
+            enumerate_candidates(cfg, parts=(0,))
+
+
+# ---------------------------------------------------------------------------
+# 7. pareto_front dominance filtering
+# ---------------------------------------------------------------------------
+class TestParetoFront:
+    def test_simple_dominance(self):
+        mask = pareto_front([[1.0, 1.0], [2.0, 2.0], [0.5, 3.0]])
+        np.testing.assert_array_equal(mask, [True, False, True])
+
+    def test_duplicates_both_survive(self):
+        mask = pareto_front([[1.0, 1.0], [1.0, 1.0], [2.0, 0.5]])
+        np.testing.assert_array_equal(mask, [True, True, True])
+
+    def test_partial_tie_dominates(self):
+        # equal in one column, strictly better in the other -> dominates
+        mask = pareto_front([[1.0, 2.0], [1.0, 1.0]])
+        np.testing.assert_array_equal(mask, [False, True])
+
+    def test_non_2d_raises(self):
+        with pytest.raises(ValueError, match="expected \\[N, D\\]"):
+            pareto_front([1.0, 2.0])
+
+    def test_single_point_kept(self):
+        np.testing.assert_array_equal(pareto_front([[3.0, 3.0, 3.0]]), [True])
+
+
+# ---------------------------------------------------------------------------
+# 8. sweep_zoo end-to-end (one batched solve) + check_fronts contract
+# ---------------------------------------------------------------------------
+class TestSweepZoo:
+    @pytest.fixture(scope="class")
+    def report(self):
+        return sweep_zoo(
+            archs=("qwen1.5-0.5b", "nemotron-h-8b"),
+            topologies=("iot",),
+            loads=(1.0,),
+            etas=(0.5,),
+            max_per_p=4,
+            seq_len=64,
+            m_max=2,
+            t_phi=2,
+            round_to=4,
+        )
+
+    def test_report_shape(self, report):
+        # 1 topology x 1 load: the whole batch lands in one cell group
+        assert report["n_instances"] == report["candidates_per_topo_load"]
+        assert len(report["cells"]) == 2  # one per (arch, topo, load)
+        for cell in report["cells"]:
+            assert cell["n_points"] >= 4  # mixed P=1..4 candidates
+            parts_seen = {p["parts"] for p in cell["points"]}
+            assert parts_seen == {1, 2, 3, 4}  # genuinely mixed-P batch
+            for p in cell["points"]:
+                assert np.isfinite([p["latency"], p["compute"], p["egress"]]).all()
+                assert len(p["splits"]) == p["parts"] - 1
+
+    def test_fronts_verify(self, report):
+        check_fronts(report)  # raises on any violated contract
+
+    def test_tampered_front_caught(self, report):
+        import copy
+
+        bad = copy.deepcopy(report)
+        cell = bad["cells"][0]
+        dominated = [
+            i for i, p in enumerate(cell["points"]) if not p["on_front"]
+        ]
+        cell["front"] = sorted(cell["front"] + dominated[:1])
+        with pytest.raises(ValueError, match="re-verified"):
+            check_fronts(bad)
+
+    def test_accounting_not_silent(self, report):
+        assert report["cut_sets_possible"] > report["n_instances"]
+        assert report["cut_sets_dropped"] >= 0
+        assert (
+            report["cut_sets_possible"]
+            == report["cut_sets_dropped"] + report["candidates_per_topo_load"]
+        )
+
+    def test_unknown_topology_raises(self):
+        with pytest.raises(ValueError, match="unknown topology"):
+            sweep_zoo(archs=("qwen1.5-0.5b",), topologies=("nope",))
+
+    def test_bad_eta_raises(self):
+        with pytest.raises(ValueError, match="eta"):
+            sweep_zoo(archs=("qwen1.5-0.5b",), etas=(1.5,))
+
+
+# ---------------------------------------------------------------------------
+# 9. mixed-P candidates through solve_fleet: finite + conservation
+# ---------------------------------------------------------------------------
+def _solve_candidate_batch(profiles, eta=0.5, m_max=2):
+    """One iot-scenario problem per profile; all solved in one fleet call."""
+    base = SCENARIOS["iot"](load_scale=0.5)
+    src = np.asarray(base.apps.src)
+    dst = np.asarray(base.apps.dst)
+    lam = np.asarray(base.apps.lam)
+    cost = CostModel(w_comm=eta, w_comp=1.0 - eta)
+    problems = []
+    for prof in profiles:
+        byte_scale = 2.0 / max(prof.L_bytes)
+        flop_scale = 1.3 / sum(prof.w_flops)
+        apps = apps_from_profiles(
+            [prof] * len(src), src, dst, lam,
+            byte_scale=byte_scale, flop_scale=flop_scale,
+        )
+        problems.append(
+            Problem(net=base.net, apps=apps, cost=cost, hop_bound=base.hop_bound)
+        )
+    return solve_fleet(problems, m_max=m_max, t_phi=2, round_to=4, trace=False)
+
+
+def test_mixed_p_solve_finite_and_conserving():
+    """Deterministic slice of the hypothesis property below: a mixed-depth
+    candidate batch (P = 1, 2, 4 of one arch) solves to finite objectives
+    satisfying J = w_comm*J_comm + w_comp*J_comp, with hosts inside the
+    real node block and per-app depth preserved through the padding."""
+    cfg = get_config("gemma-2b")
+    profiles = [
+        profile_arch(cfg, seq_len=64, splits=()),
+        profile_arch(cfg, seq_len=64),
+        profile_arch(cfg, seq_len=64, splits=(4, 9, 14)),
+    ]
+    res = _solve_candidate_batch(profiles)
+    V = int(SCENARIOS["iot"](load_scale=0.5).net.adj.shape[0])
+    for prof, row in zip(profiles, res.per_instance()):
+        assert np.isfinite([row["J"], row["J_comm"], row["J_comp"]]).all()
+        assert row["J"] == pytest.approx(
+            0.5 * row["J_comm"] + 0.5 * row["J_comp"], rel=1e-4
+        )
+        assert row["partitions"] == prof.n_parts
+        assert "padded_host_leaks" not in row
+        for hosts in row["hosts"]:
+            assert len(hosts) == prof.n_parts
+            assert all(0 <= h < V for h in hosts)
+
+
+@given(data=st.data())
+@settings(max_examples=5, deadline=None)
+def test_property_any_candidate_solves(data):
+    """Hypothesis property (skipped cleanly without the extra): ANY
+    enumerated cut set of ANY zoo config yields finite, conservation-
+    satisfying solve_fleet results through the mixed-P padding."""
+    arch = data.draw(st.sampled_from(list(ZOO)))
+    cfg = get_config(arch)
+    total = total_profile_layers(cfg)
+    n_cuts = data.draw(st.integers(min_value=0, max_value=3))
+    cuts = tuple(
+        sorted(
+            data.draw(
+                st.lists(
+                    st.integers(min_value=1, max_value=total - 1),
+                    min_size=n_cuts, max_size=n_cuts, unique=True,
+                )
+            )
+        )
+    )
+    prof = profile_arch(cfg, seq_len=64, splits=cuts)
+    assert np.isfinite(prof.L_bytes).all() and np.isfinite(prof.w_flops).all()
+    assert all(v > 0 for v in prof.w_flops)
+    res = _solve_candidate_batch([prof])
+    row = res.per_instance()[0]
+    assert np.isfinite([row["J"], row["J_comm"], row["J_comp"]]).all()
+    assert row["J"] == pytest.approx(
+        0.5 * row["J_comm"] + 0.5 * row["J_comp"], rel=1e-4
+    )
+    assert row["partitions"] == prof.n_parts
+    assert "padded_host_leaks" not in row
