@@ -6,8 +6,9 @@ if any paper claim fails.
         [--check-trend] [--trend-tol 0.2] [--trend-metrics all|ratios]
 
 `--json-out` persists each bench's result dict as `BENCH_<name>.json` at the
-repo root (commit hash + timings + speedups), so the perf trajectory is
-tracked PR-over-PR and CI can upload the files as artifacts. Under
+repo root (commit hash + dirty-worktree flag + timings + speedups), so the
+perf trajectory is tracked PR-over-PR and CI can upload the files as
+artifacts. Under
 SCALE_SMALL=1 the file is `BENCH_<name>.small.json` instead: small-tier
 smoke numbers must never overwrite (or be compared against) the full-scale
 trajectory.
@@ -20,7 +21,19 @@ restricts the check to machine-portable metrics — what CI uses, since raw
 per-round milliseconds are only comparable on similar hardware. Portable
 metrics are the speedups/ratios plus the solver-telemetry counts
 (`rounds_executed`, `pad_overhead`): more rounds to hit the same tolerance
-is a convergence regression no matter the machine.
+is a convergence regression no matter the machine. A baseline section
+recorded as `{"skipped": true}` is REFUSED when the fresh run produced
+numbers for it (a partial baseline lints nothing, forever), and a baseline
+whose commit is not an ancestor of HEAD — or that was measured from a
+dirty worktree — is warned about.
+
+When REPRO_FLEET_SECTIONS explicitly requests the fleet bench's
+`shard_axis` section, the harness sets
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` BEFORE importing jax,
+so a single-device host that asks for the mesh section actually gets a
+mesh. The default run leaves XLA_FLAGS alone — forcing the split shifts
+every other section's warm timings, so committed baselines stay measured
+on the native topology.
 
 Observability (DESIGN.md section 14): each bench runs inside a host span
 and with a cleared metrics registry; whatever the instrumented solvers
@@ -39,7 +52,45 @@ import sys
 import time
 import traceback
 
-from benchmarks import (
+
+def _fleet_shard_requested() -> bool:
+    """Was the fleet bench's shard-axis section EXPLICITLY requested?
+
+    Explicit means REPRO_FLEET_SECTIONS names `shard_axis` (and --only does
+    not exclude the fleet bench). The default run deliberately does NOT
+    count: forcing the simulated 8-device mesh reshapes the host's XLA
+    device topology, which shifts every section's warm timings (measured:
+    the batched engine loses ~30% warm throughput under the split), so the
+    committed baselines must be measured without it and the shard section
+    reports itself skipped on single-device hosts instead.
+    """
+    only = None
+    for i, a in enumerate(sys.argv):
+        if a == "--only" and i + 1 < len(sys.argv):
+            only = sys.argv[i + 1]
+        elif a.startswith("--only="):
+            only = a.split("=", 1)[1]
+    if only is not None and "fleet" not in only.split(","):
+        return False
+    sections = os.environ.get("REPRO_FLEET_SECTIONS")
+    if not sections:
+        return False
+    return "shard_axis" in [s.strip() for s in sections.split(",")]
+
+
+# Must run BEFORE anything imports jax: the XLA platform reads XLA_FLAGS at
+# backend initialization, so a single-device host can only present the
+# simulated 8-CPU mesh the shard-axis section needs if the flag is already
+# set here. If jax snuck in first (run.py imported from another script),
+# leave the environment alone — a flag change would silently not apply.
+if _fleet_shard_requested() and "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+
+from benchmarks import (  # noqa: E402
     fig2_scenarios,
     fig4_load_sweep,
     fig5_tradeoff,
@@ -51,8 +102,8 @@ from benchmarks import (
     serve_bench,
     table1_topologies,
 )
-from repro.obs import metrics as obs_metrics
-from repro.obs import trace as obs_trace
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs import trace as obs_trace  # noqa: E402
 
 # Every benchmarks/*.py module (except this harness) is registered here, so
 # --only accepts each by name and the table is the complete inventory.
@@ -82,17 +133,42 @@ def bench_json_path(name: str) -> pathlib.Path:
     return REPO_ROOT / f"BENCH_{name}{suffix}.json"
 
 
+def _git(*argv: str) -> subprocess.CompletedProcess:
+    return subprocess.run(
+        ["git", *argv], cwd=REPO_ROOT, capture_output=True, text=True
+    )
+
+
 def _commit_hash() -> str:
     try:
-        return subprocess.run(
-            ["git", "rev-parse", "HEAD"],
-            cwd=REPO_ROOT,
-            capture_output=True,
-            text=True,
-            check=True,
-        ).stdout.strip()
+        r = _git("rev-parse", "HEAD")
+        return r.stdout.strip() if r.returncode == 0 else "unknown"
     except Exception:
         return "unknown"
+
+
+def _worktree_dirty() -> bool | None:
+    """Uncommitted changes in tracked files (None if git is unavailable)."""
+    try:
+        r = _git("status", "--porcelain", "--untracked-files=no")
+        return bool(r.stdout.strip()) if r.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def _baseline_commit_is_ancestor(commit: str) -> bool | None:
+    """Whether `commit` is an ancestor of HEAD (None = undecidable)."""
+    if not commit or commit == "unknown":
+        return None
+    try:
+        r = _git("merge-base", "--is-ancestor", commit, "HEAD")
+    except Exception:
+        return None
+    if r.returncode == 0:
+        return True
+    if r.returncode == 1:
+        return False
+    return None  # unknown object (shallow clone, foreign repo), can't say
 
 
 def write_json(name: str, payload, elapsed_s: float) -> pathlib.Path:
@@ -101,6 +177,10 @@ def write_json(name: str, payload, elapsed_s: float) -> pathlib.Path:
     record = {
         "bench": name,
         "commit": _commit_hash(),
+        # Provenance: a baseline measured from an uncommitted tree is not
+        # reproducible from its recorded commit — flag it in the file so a
+        # trend comparison (and a reviewer) can see it.
+        "dirty": _worktree_dirty(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "scale": _scale_tier(),
         "elapsed_s": round(elapsed_s, 2),
@@ -151,15 +231,60 @@ def trend_metrics(result, prefix: str = "") -> dict:
     return out
 
 
+def skipped_sections(result, prefix: str = "") -> list[str]:
+    """Dotted paths of every `{"skipped": true}` marker in a result dict."""
+    out = []
+    if isinstance(result, dict):
+        if result.get("skipped") is True:
+            out.append(prefix.rstrip("."))
+        for k, v in result.items():
+            out.extend(skipped_sections(v, f"{prefix}{k}."))
+    return out
+
+
 def check_trend(
     name: str, fresh, baseline_record, *, tol: float, ratios_only: bool
 ) -> list[str]:
     """Compare one fresh result dict to its committed baseline record.
 
     Returns human-readable regression strings (empty = clean)."""
+    regressions = []
+    # Provenance guards. (1) A baseline whose section never ran has no
+    # numbers to compare — linting "against" it silently passes forever, so
+    # a section the fresh run DID produce numbers for refuses the partial
+    # baseline outright. (2) A baseline from a commit that is not an
+    # ancestor of HEAD (rebased away, or measured on another branch) is
+    # only warned about: the numbers may still be comparable, but the
+    # reader should know the trajectory has a seam.
+    base_skipped = set(skipped_sections(baseline_record.get("result", {})))
+    fresh_skipped = set(skipped_sections(fresh))
+    stale = sorted(base_skipped - fresh_skipped)
+    if stale:
+        for path in stale:
+            regressions.append(
+                f"{name}:{path} baseline section was recorded as skipped — "
+                "no numbers to lint against; regenerate the baseline with "
+                "the section enabled"
+            )
+            print(
+                f"trend,{name} {path}: baseline skipped [REFUSED]", flush=True
+            )
+    b_commit = baseline_record.get("commit", "")
+    if _baseline_commit_is_ancestor(b_commit) is False:
+        print(
+            f"trend,{name} WARNING: baseline commit {b_commit[:12]} is not "
+            "an ancestor of HEAD (rebase? foreign baseline?) — comparison "
+            "may span divergent code",
+            flush=True,
+        )
+    if baseline_record.get("dirty"):
+        print(
+            f"trend,{name} WARNING: baseline was recorded from a dirty "
+            "worktree — its commit hash does not pin the measured code",
+            flush=True,
+        )
     base = trend_metrics(baseline_record.get("result", {}))
     new = trend_metrics(fresh)
-    regressions = []
     for path, (b_val, direction, portable) in sorted(base.items()):
         if path not in new:
             continue

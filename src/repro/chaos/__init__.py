@@ -21,4 +21,4 @@ from .events import (  # noqa: F401
     apply_health,
     generate_trace,
 )
-from .repair import repair_fleet  # noqa: F401
+from .repair import Apsp0Cache, refresh_apsp0, repair_fleet  # noqa: F401

@@ -89,6 +89,7 @@ def solve_alt(
     use_pallas: bool = False,
     interpret: bool = True,
     solver: str = "neumann",
+    block_apps: int = 1,
     name: str = "ALT",
 ) -> Result:
     """The full alternating method (Algorithm 1), with best-iterate tracking.
@@ -113,6 +114,7 @@ def solve_alt(
         use_pallas=use_pallas,
         interpret=interpret,
         solver=solver,
+        block_apps=block_apps,
     )
 
 
@@ -124,6 +126,7 @@ def solve_oneshot(
     use_pallas: bool = False,
     interpret: bool = True,
     solver: str = "neumann",
+    block_apps: int = 1,
 ) -> Result:
     """One placement/forwarding round: isolates the value of alternation.
 
@@ -142,6 +145,7 @@ def solve_oneshot(
         use_pallas=use_pallas,
         interpret=interpret,
         solver=solver,
+        block_apps=block_apps,
     )
 
 
@@ -199,6 +203,7 @@ def solve_colocated(
     use_pallas: bool = False,
     interpret: bool = True,
     solver: str = "neumann",
+    block_apps: int = 1,
 ) -> Result:
     """All partitions at a single node; forwarding still congestion-aware."""
     return solve_alt(
@@ -212,6 +217,7 @@ def solve_colocated(
         use_pallas=use_pallas,
         interpret=interpret,
         solver=solver,
+        block_apps=block_apps,
         name="CoLocated",
     )
 
@@ -231,13 +237,17 @@ ALL_METHODS = {
 METHOD_KWARGS = {
     "ALT": (
         "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
-        "interpret", "solver",
+        "interpret", "solver", "block_apps",
     ),
-    "OneShot": ("t_phi", "alpha", "use_pallas", "interpret", "solver"),
+    "OneShot": (
+        "t_phi", "alpha", "use_pallas", "interpret", "solver", "block_apps",
+    ),
+    # CongUnaware runs no placement sweep (structured init only), so the
+    # sweep-schedule knob does not apply to it.
     "CongUnaware": ("use_pallas", "interpret", "solver"),
     "CoLocated": (
         "m_max", "t_phi", "alpha", "tol", "patience", "use_pallas",
-        "interpret", "solver",
+        "interpret", "solver", "block_apps",
     ),
 }
 

@@ -30,7 +30,10 @@ values, never read by it).
 Batch semantics (DESIGN.md section 11):
   * the whole round body is vmapped over the leading instance axis, so a
     stacked fleet and a single `[1, ...]`-stacked problem run the exact same
-    compiled loop — sequential solving IS the engine at B=1, squeezed;
+    compiled loop — sequential solving IS the engine at B=1, squeezed.
+    `engine_solve(lane_chunk=k >= 1)` flips the nesting to lane-major (each
+    lane's full solve inside `lax.map`, DESIGN.md section 18) with
+    bitwise-identical per-lane outputs;
   * frozen instances (stalled for `patience` rounds) are masked out of every
     carry update, so extra trips driven by still-live instances leave their
     results bit-identical;
@@ -184,6 +187,7 @@ def round_step(
     use_pallas: bool,
     solver: str,
     interpret: bool = True,
+    block_apps: int = 1,
 ) -> EngineCarry:
     """One batched ALT round: Algorithm 1's loop body plus bookkeeping.
 
@@ -191,12 +195,18 @@ def round_step(
     then T_phi forwarding sweeps run, then one `round_eval` closes the round.
     Stall is measured against the best J *before* this round's update, and
     every carry slot of a frozen instance is masked back to its old value.
+    `block_apps` selects the placement sweep schedule (placement.py module
+    doc): 1 = sequential scan, k > 1 / 0 = blocked sweep.
+    The round body is one vmapped program over all B lanes — the layout
+    choice over the instance axis (fused rounds vs lane-major chunks) lives
+    in `engine_solve(lane_chunk=...)`, which decides whether this step runs
+    over the whole batch per trip or inside a per-lane solve.
     """
 
     def one_round(p, s, ctg):
         nxt = placement_update(
             p, s, ctg, colocate=colocate, use_pallas=use_pallas,
-            interpret=interpret, solver=solver,
+            interpret=interpret, solver=solver, block_apps=block_apps,
         )
         nxt = forwarding_update(
             p, nxt, t_phi=t_phi, alpha=alpha, solver=solver,
@@ -207,7 +217,9 @@ def round_step(
         )
         return nxt, J, aux_nxt
 
-    nxt, J, aux_nxt = jax.vmap(one_round)(problem, carry.state, carry.aux["ctg"])
+    nxt, J, aux_nxt = jax.vmap(one_round)(
+        problem, carry.state, carry.aux["ctg"]
+    )
 
     improved = J < carry.best_J * (1.0 - tol)
     stall_nxt = jnp.where(improved, 0, carry.stall + 1)
@@ -262,14 +274,7 @@ def round_step(
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "m_max", "t_phi", "alpha", "tol", "patience", "colocate",
-        "track_best", "use_pallas", "interpret", "solver", "trace",
-    ),
-)
-def engine_solve(
+def _engine_solve_batch(
     stacked: Problem,
     *,
     m_max: int,
@@ -277,43 +282,19 @@ def engine_solve(
     alpha: float,
     tol: float,
     patience: int,
-    colocate: bool = False,
-    track_best: bool = True,
-    use_pallas: bool = False,
-    interpret: bool = True,
-    solver: str = "neumann",
-    trace: bool = True,
-    init_state: State | None = None,
-    active0: jax.Array | None = None,
+    colocate: bool,
+    track_best: bool,
+    use_pallas: bool,
+    interpret: bool,
+    solver: str,
+    trace: bool,
+    block_apps: int,
+    keep_state: bool,
+    init_state: State | None,
+    active0: jax.Array | None,
 ) -> dict:
-    """Run the alternating method on a stacked `[B, ...]` problem pytree.
-
-    Warm start (DESIGN.md section 15): `init_state` seeds the while_loop
-    carry from a caller-provided `[B, ...]` State (e.g. the previous control
-    epoch's placement after failure repair) instead of `structured_init`;
-    `active0` is an optional [B] bool mask freezing instances from round 0 —
-    a frozen-from-start lane never runs a round and returns exactly its
-    init-state evaluation, so an epoch whose fault touched 2 of 64 instances
-    burns rounds only on those 2. Both are traced pytree arguments (None vs
-    provided changes the trace, same as `trace=`); the cold path (both None)
-    is the exact pre-warm-start program. When every lane starts frozen the
-    loop body never runs and the init evaluation IS the result — the
-    controller's "every epoch ends with a servable placement" guarantee.
-
-    Returns a dict of device arrays (leading axis B throughout):
-      J / J_comm / J_comp : final objective split (best iterate, or the
-                            final state when `track_best=False` — the
-                            OneShot semantics)
-      state               : the returned State (best or final)
-      hosts               : [B, A, P] partition hosts of `state`
-      history             : [B, m_max + 1] objective trace, NaN past freeze
-      iters               : [B] int32 rounds applied per instance
-      rounds              : scalar int32 while_loop trips actually executed
-                            (< m_max whenever the whole batch froze early)
-      trace               : `EngineTrace` round-trace buffers (None when
-                            `trace=False`); every other output is
-                            bitwise-identical across the two settings
-    """
+    """The fused-batch engine core: init + one lockstep `lax.while_loop`
+    whose round body vmaps over every lane (see `engine_solve`)."""
 
     if init_state is None:
 
@@ -375,6 +356,7 @@ def engine_solve(
         use_pallas=use_pallas,
         solver=solver,
         interpret=interpret,
+        block_apps=block_apps,
     )
     carry = jax.lax.while_loop(
         lambda c: (c.m < m_max) & c.any_active, step, carry
@@ -383,17 +365,143 @@ def engine_solve(
         out_state, out_obj = carry.best_state, carry.best_obj
     else:
         out_state, out_obj = carry.state, _objective_of(carry.aux)
-    return {
+    out = {
         "J": out_obj["J"],
         "J_comm": out_obj["J_comm"],
         "J_comp": out_obj["J_comp"],
-        "state": out_state,
         "hosts": out_state.hosts(),
         "history": carry.history,
         "iters": carry.iters,
         "rounds": carry.m,
         "trace": carry.trace,
     }
+    if keep_state:
+        out["state"] = out_state
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "m_max", "t_phi", "alpha", "tol", "patience", "colocate",
+        "track_best", "use_pallas", "interpret", "solver", "trace",
+        "block_apps", "lane_chunk", "keep_state",
+    ),
+)
+def engine_solve(
+    stacked: Problem,
+    *,
+    m_max: int,
+    t_phi: int,
+    alpha: float,
+    tol: float,
+    patience: int,
+    colocate: bool = False,
+    track_best: bool = True,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    solver: str = "neumann",
+    trace: bool = True,
+    block_apps: int = 1,
+    lane_chunk: int = 0,
+    keep_state: bool = True,
+    init_state: State | None = None,
+    active0: jax.Array | None = None,
+) -> dict:
+    """Run the alternating method on a stacked `[B, ...]` problem pytree.
+
+    Warm start (DESIGN.md section 15): `init_state` seeds the while_loop
+    carry from a caller-provided `[B, ...]` State (e.g. the previous control
+    epoch's placement after failure repair) instead of `structured_init`;
+    `active0` is an optional [B] bool mask freezing instances from round 0 —
+    a frozen-from-start lane never runs a round and returns exactly its
+    init-state evaluation, so an epoch whose fault touched 2 of 64 instances
+    burns rounds only on those 2. Both are traced pytree arguments (None vs
+    provided changes the trace, same as `trace=`); the cold path (both None)
+    is the exact pre-warm-start program. When every lane starts frozen the
+    loop body never runs and the init evaluation IS the result — the
+    controller's "every epoch ends with a servable placement" guarantee.
+
+    `lane_chunk` picks the layout over the instance axis (DESIGN.md
+    section 18). 0 = the fused batch: ONE lockstep while_loop whose round
+    body vmaps over all B lanes — the only layout compatible with a
+    committed instance-axis mesh. k >= 1 = lane-major: each lane's WHOLE
+    solve (init eval + its own while_loop) runs inside `lax.map` over
+    k-lane chunks, so a lane's [A, K, V, V] working set stays
+    cache-resident across its rounds, the per-round slice/stack traffic of
+    mapping the round body is paid once per solve instead of once per trip,
+    and a converged lane stops computing immediately (the per-instance
+    early exit of the sequential path, inside one compiled program).
+    Per-lane outputs are bitwise-identical across layouts: each lane runs
+    the same op sequence either way, freeze masking keeps lockstep trips
+    inert past a lane's own stall point, and the NaN-past-freeze buffer
+    contract writes the same values in both schedules.
+
+    `keep_state=False` drops the full `[B, ...]` State from the output dict
+    (the fleet path's default — it only surfaces `hosts` unless the caller
+    asked for the warm-start currency), which in the lane-major layout also
+    skips stacking B phi-shaped buffers on the way out.
+
+    Returns a dict of device arrays (leading axis B throughout):
+      J / J_comm / J_comp : final objective split (best iterate, or the
+                            final state when `track_best=False` — the
+                            OneShot semantics)
+      state               : the returned State (best or final); absent
+                            when `keep_state=False`
+      hosts               : [B, A, P] partition hosts of the returned state
+      history             : [B, m_max + 1] objective trace, NaN past freeze
+      iters               : [B] int32 rounds applied per instance
+      rounds              : scalar int32 while_loop trips actually executed
+                            (< m_max whenever the whole batch froze early;
+                            lane-major: the max over per-lane loop trips,
+                            the same number by the freeze-point argument)
+      trace               : `EngineTrace` round-trace buffers (None when
+                            `trace=False`); every other output is
+                            bitwise-identical across the two settings
+    """
+    kw = dict(
+        m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol, patience=patience,
+        colocate=colocate, track_best=track_best, use_pallas=use_pallas,
+        interpret=interpret, solver=solver, trace=trace,
+        block_apps=block_apps, keep_state=keep_state,
+    )
+    if lane_chunk == 0:
+        return _engine_solve_batch(
+            stacked, init_state=init_state, active0=active0, **kw
+        )
+
+    def lane_solve(args):
+        p, s0, a0 = args
+
+        def lift(t):
+            return (
+                None if t is None
+                else jax.tree_util.tree_map(lambda x: x[None], t)
+            )
+
+        out = _engine_solve_batch(
+            lift(p),
+            init_state=lift(s0),
+            active0=None if a0 is None else a0[None],
+            **kw,
+        )
+        squeezed = {
+            k: jax.tree_util.tree_map(lambda x: x[0], v)
+            for k, v in out.items()
+            if k != "rounds"
+        }
+        squeezed["rounds"] = out["rounds"]
+        return squeezed
+
+    out = jax.lax.map(
+        lane_solve,
+        (stacked, init_state, active0),
+        batch_size=lane_chunk if lane_chunk > 1 else None,
+    )
+    # Per-lane loop trips stack to [B]; the engine contract is ONE scalar
+    # (trips the batch would have executed in lockstep = the slowest lane).
+    out["rounds"] = jnp.max(out["rounds"])
+    return out
 
 
 def stack_single(problem: Problem) -> Problem:

@@ -42,6 +42,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.structs import Apps, BIG, Network, Problem
 
@@ -95,9 +96,13 @@ def pad_network(net: Network, n_nodes: int) -> Network:
     if n_nodes == v:
         return net
     pad = n_nodes - v
-    adj = jnp.pad(net.adj, ((0, pad), (0, pad)))
-    mu = jnp.pad(net.mu, ((0, pad), (0, pad)), constant_values=BIG)
-    nu = jnp.pad(net.nu, (0, pad), constant_values=NU_PAD)
+    # Host-side numpy pads: every call site is outside jit (the stack path
+    # runs before the engine dispatch), and padding a dozen instances as
+    # ~100 tiny XLA programs costs more wall time than the engine round it
+    # precedes. Values are identical bit for bit.
+    adj = np.pad(np.asarray(net.adj), ((0, pad), (0, pad)))
+    mu = np.pad(np.asarray(net.mu), ((0, pad), (0, pad)), constant_values=BIG)
+    nu = np.pad(np.asarray(net.nu), (0, pad), constant_values=NU_PAD)
     return Network(adj=adj, mu=mu, nu=nu)
 
 
@@ -120,13 +125,14 @@ def pad_apps(apps: Apps, n_apps: int, n_parts: int | None = None) -> Apps:
         return apps
     pad = n_apps - a
     ppad = p_new - p_old
+    # Host-side numpy pads, same rationale as pad_network.
     return Apps(
-        src=jnp.pad(apps.src, (0, pad)),
-        dst=jnp.pad(apps.dst, (0, pad)),
-        lam=jnp.pad(apps.lam, (0, pad)),
-        L=jnp.pad(apps.L, ((0, pad), (0, ppad))),
-        w=jnp.pad(apps.w, ((0, pad), (0, ppad))),
-        parts=jnp.pad(apps.parts, (0, pad), constant_values=1),
+        src=np.pad(np.asarray(apps.src), (0, pad)),
+        dst=np.pad(np.asarray(apps.dst), (0, pad)),
+        lam=np.pad(np.asarray(apps.lam), (0, pad)),
+        L=np.pad(np.asarray(apps.L), ((0, pad), (0, ppad))),
+        w=np.pad(np.asarray(apps.w), ((0, pad), (0, ppad))),
+        parts=np.pad(np.asarray(apps.parts), (0, pad), constant_values=1),
     )
 
 
@@ -147,8 +153,8 @@ def pad_problem(
         hop_bound=problem.hop_bound,
     )
     info = PadInfo(
-        node_mask=(jnp.arange(n_nodes) < v).astype(jnp.float32),
-        app_mask=(jnp.arange(n_apps) < a).astype(jnp.float32),
+        node_mask=(np.arange(n_nodes) < v).astype(np.float32),
+        app_mask=(np.arange(n_apps) < a).astype(np.float32),
     )
     return padded, info
 
@@ -266,8 +272,11 @@ def stack_problems(
     padded, infos = zip(*(pad_problem(p, v, a, p_env) for p in problems))
     def stack(*xs):
         # Leaves are arrays except the CostModel scalars, which may still be
-        # Python floats; asarray unifies both before stacking.
-        return jnp.stack([jnp.asarray(x) for x in xs])
+        # Python floats; asarray unifies both before stacking. The stack runs
+        # on host (numpy) with ONE device transfer per stacked leaf — doing
+        # it in jnp dispatches a program per leaf per instance, which at
+        # B = 12 costs more than the transfer it feeds.
+        return jnp.asarray(np.stack([np.asarray(x) for x in xs]))
 
     stacked_problem = jax.tree_util.tree_map(stack, *padded)
     stacked_info = jax.tree_util.tree_map(stack, *infos)

@@ -5,9 +5,11 @@ envelope (fleet/pad.py), stacks them into a single pytree, and hands the
 stack to the shared device-resident round engine (core/engine.py): the whole
 ALT pipeline — structured init, placement reassignment, forwarding sweeps,
 objective, best-iterate/stall/freeze bookkeeping — runs as ONE jitted
-`lax.while_loop` vmapped over the instance axis. There is no fleet-local
-copy of the loop body any more; the sequential solvers in core/alt.py run
-the exact same engine at B=1, so the two paths share every future fix.
+program over the instance axis (a lockstep while_loop vmapped over lanes
+when a mesh is committed, lane-major `lax.map` chunks otherwise — see
+`lane_chunk`). There is no fleet-local copy of the loop body any more; the
+sequential solvers in core/alt.py run the exact same engine at B=1, so the
+two paths share every future fix.
 
 Equivalence contract: for every instance, the returned J matches the
 sequential `solve_alt` on the unpadded problem (same m_max / t_phi / alpha /
@@ -349,6 +351,8 @@ def _solve_fleet_stacked(
     interpret: bool = True,
     trace: bool = True,
     keep_state: bool = False,
+    block_apps: int = 1,
+    lane_chunk: int = 0,
     init_state: State | None = None,
     active0=None,
 ) -> dict:
@@ -363,6 +367,10 @@ def _solve_fleet_stacked(
         out["rounds"] = jnp.int32(0)
         out["trace"] = None
         return out
+    # keep_state=False drops the full [B, A, K, V, V] State inside the
+    # engine: the fleet result only surfaces hosts, a chunked solve would
+    # otherwise keep every chunk's phi buffers alive until the final
+    # gather, and the lane-major layout would stack B of them for nothing.
     out = dict(
         engine_solve(
             stacked,
@@ -377,15 +385,13 @@ def _solve_fleet_stacked(
             interpret=interpret,
             solver=solver,
             trace=trace,
+            block_apps=block_apps,
+            lane_chunk=lane_chunk,
+            keep_state=keep_state,
             init_state=init_state,
             active0=active0,
         )
     )
-    if not keep_state:
-        # Drop the full [B, A, K, V, V] State: the fleet result only
-        # surfaces hosts, and a chunked solve would otherwise keep every
-        # chunk's phi buffers alive until the final gather.
-        out.pop("state")
     return out
 
 
@@ -542,6 +548,8 @@ def solve_fleet(
     use_pallas: bool = False,
     interpret: bool = True,
     solver: str = "neumann",
+    block_apps: int = 1,
+    lane_chunk: int | None = None,
     chunk_size: int | None = None,
     envelope_cap_gb: float | None = None,
     trace: bool = True,
@@ -565,6 +573,23 @@ def solve_fleet(
     devices    : cap the fleet mesh to the first N local devices
                  (requires shard=True; asking for more than exist raises)
     solver     : "neumann" (hop-capped propagation, default) | "lu" (dense)
+    block_apps : placement sweep schedule (core/placement.py module doc):
+                 1 = the paper's sequential per-app scan (default), k > 1 =
+                 blocked Jacobi scoring with conflict-checked acceptance in
+                 size-k blocks, 0 = one block over all apps. Ignored by
+                 CongUnaware (no placement sweep).
+    lane_chunk : engine layout over the instance axis (engine_solve):
+                 0 = the fused batch — one lockstep while_loop whose round
+                 body vmaps over all lanes (the only layout compatible with
+                 a committed fleet mesh); k >= 1 = lane-major — each lane's
+                 WHOLE solve runs inside `lax.map(..., batch_size=k)`, so
+                 its phi-shaped buffers stay cache-resident across rounds
+                 and a converged lane stops computing immediately instead
+                 of riding lockstep until the slowest lane stalls. Results
+                 are bitwise-identical across layouts. None (default) =
+                 auto: lane-major when unsharded, fused vmap when a mesh is
+                 committed. Asking for a nonzero chunk together with
+                 shard=True raises.
     interpret  : with use_pallas=True, run the kernel bodies under the Pallas
                  interpreter (CPU validation). A real TPU/GPU launch passes
                  interpret=False; ignored when use_pallas=False.
@@ -617,9 +642,20 @@ def solve_fleet(
         method=method, m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol,
         patience=patience, use_pallas=use_pallas, interpret=interpret,
         solver=solver, trace=trace, keep_state=keep_state,
+        block_apps=block_apps,
     )
     n = len(problems)
     mesh, n_dev, reason = _plan_mesh(shard, devices)
+
+    if lane_chunk is not None and lane_chunk != 0 and mesh is not None:
+        raise ValueError(
+            f"lane_chunk={lane_chunk} is incompatible with a committed fleet "
+            "mesh: lax.map lane chunks break the instance-axis sharding — "
+            "use lane_chunk=0 (or leave it None) when shard=True"
+        )
+    if lane_chunk is None:
+        lane_chunk = 0 if mesh is not None else 1
+    solve_kw["lane_chunk"] = lane_chunk
 
     if envelope_cap_gb is not None:
         cap = envelope_cap_chunk(
@@ -680,12 +716,42 @@ def solve_fleet(
         and all(ok for (_, _, _, _, ok) in outs),
     )
 
-    def gather(getter):
-        return np.concatenate(
-            [np.asarray(getter(o, i))[:k] for (o, i, k, _, _) in outs]
+    def chunk_fields(o, i):
+        d = dict(
+            J=o["J"], J_comm=o["J_comm"], J_comp=o["J_comp"],
+            history=o["history"], iters=o["iters"], rounds=o["rounds"],
+            hosts=o["hosts"], parts=o["parts"],
+            node_mask=i.node_mask, app_mask=i.app_mask,
         )
+        if o.get("trace") is not None:
+            t = o["trace"]
+            d.update(
+                trace_J_comm=t.J_comm, trace_J_comp=t.J_comp,
+                trace_moves=t.moves, trace_live=t.live,
+                trace_best_round=t.best_round,
+            )
+        return d
 
     with span("solve_fleet.gather", chunks=len(outs)):
+        # ONE device->host sync for every result field across every chunk
+        # (device_get on the whole tree): a sync per field per chunk costs
+        # more host round-trips than the arrays are worth — the gathered
+        # fields are all small [B]- or [B, m_max]-shaped summaries.
+        host = jax.device_get(
+            [chunk_fields(o, i) for (o, i, _, _, _) in outs]
+        )
+
+        def gather(name):
+            parts_ = [hc[name][:k] for hc, (_, _, k, _, _) in zip(host, outs)]
+            # device_get hands back read-only buffers; the result contract
+            # is plain owned numpy (callers mutate hosts in place). The
+            # fields are small, so the copy is noise.
+            return (
+                np.array(parts_[0])
+                if len(parts_) == 1
+                else np.concatenate(parts_)
+            )
+
         kept_state = None
         if keep_state:
             # Trim pad lanes per chunk, then concatenate; stays on device —
@@ -704,24 +770,24 @@ def solve_fleet(
         fleet_trace = None
         if all(o.get("trace") is not None for (o, _, _, _, _) in outs):
             fleet_trace = FleetTrace(
-                J_comm=gather(lambda o, i: o["trace"].J_comm),
-                J_comp=gather(lambda o, i: o["trace"].J_comp),
-                moves=gather(lambda o, i: o["trace"].moves),
-                live=gather(lambda o, i: o["trace"].live),
-                best_round=gather(lambda o, i: o["trace"].best_round),
+                J_comm=gather("trace_J_comm"),
+                J_comp=gather("trace_J_comp"),
+                moves=gather("trace_moves"),
+                live=gather("trace_live"),
+                best_round=gather("trace_best_round"),
             )
         result = FleetResult(
             method=method,
-            J=gather(lambda o, i: o["J"]),
-            J_comm=gather(lambda o, i: o["J_comm"]),
-            J_comp=gather(lambda o, i: o["J_comp"]),
-            history=gather(lambda o, i: o["history"]),
-            iters=gather(lambda o, i: o["iters"]),
-            rounds=max(int(o["rounds"]) for (o, _, _, _, _) in outs),
-            hosts=gather(lambda o, i: o["hosts"]),
-            parts=gather(lambda o, i: o["parts"]),
-            node_mask=gather(lambda o, i: i.node_mask),
-            app_mask=gather(lambda o, i: i.app_mask),
+            J=gather("J"),
+            J_comm=gather("J_comm"),
+            J_comp=gather("J_comp"),
+            history=gather("history"),
+            iters=gather("iters"),
+            rounds=max(int(hc["rounds"]) for hc in host),
+            hosts=gather("hosts"),
+            parts=gather("parts"),
+            node_mask=gather("node_mask"),
+            app_mask=gather("app_mask"),
             shard=plan,
             m_max=(
                 0 if method == "CongUnaware"

@@ -43,6 +43,7 @@ from repro.chaos import (
     InstanceHealth,
     apply_health,
     generate_trace,
+    refresh_apsp0,
     repair_fleet,
 )
 from repro.core.structs import hop_bound_cache
@@ -181,6 +182,8 @@ def run_control(
     solver: str = "neumann",
     use_pallas: bool = False,
     interpret: bool = True,
+    block_apps: int = 1,
+    lane_chunk: int | None = None,
     round_to: int = 8,
     shard: bool = False,
     devices: int | None = None,
@@ -188,6 +191,7 @@ def run_control(
     backoff_s: float = 0.0,
     compare_cold: bool = False,
     verify_hop_bound: bool = False,
+    verify_apsp0: bool = False,
     trace_kwargs: dict | None = None,
 ) -> ControlResult:
     """Run the fault-injection control loop over a fleet (module doc).
@@ -207,6 +211,12 @@ def run_control(
                    scratch and assert the incremental `HopBoundCache` refresh
                    matches it bitwise (the §16 exactness contract; CI runs
                    the chaos job with this on)
+    verify_apsp0 : per warm epoch, recompute the zero-load APSP from scratch
+                   and assert the `Apsp0Cache` pair the repair consumed
+                   matches it bitwise (same CI posture as verify_hop_bound)
+    block_apps / lane_chunk : forwarded to every `solve_fleet` rung — the
+                   placement sweep schedule and the round-body lane layout
+                   (both bitwise-invariant knobs; see fleet/solve.py)
 
     The solver's hop bound stays PINNED from the base fleet (shape
     stability: re-deriving it per epoch would recompile the engine whenever
@@ -244,7 +254,8 @@ def run_control(
     solve_common = dict(
         m_max=m_max, t_phi=t_phi, alpha=alpha, tol=tol, patience=patience,
         round_to=round_to, shard=shard, devices=devices, solver=solver,
-        use_pallas=use_pallas, interpret=interpret, keep_state=True,
+        use_pallas=use_pallas, interpret=interpret,
+        block_apps=block_apps, lane_chunk=lane_chunk, keep_state=True,
         # The controller re-validates shape-stable perturbations of an
         # already-validated base fleet every epoch; keep the checks on —
         # they are exactly the NaN firewall this loop exists for.
@@ -257,6 +268,7 @@ def run_control(
     prev_health = [InstanceHealth() for _ in range(n_inst)]
     force_all_active = False
     hop_caches = [None] * n_inst
+    apsp0 = None
     t_run = time.time()
 
     for epoch, fired, healths in trace.timeline():
@@ -305,11 +317,30 @@ def run_control(
             repaired = None
             if prev_state is not None:
                 with span("control.repair", epoch=epoch):
+                    env_kw = dict(
+                        round_to=round_to, envelope=envelope,
+                        hop_bound=hop_bound, n_parts=part_env,
+                        use_pallas=use_pallas, interpret=interpret,
+                    )
+                    apsp0 = refresh_apsp0(probs, apsp0, **env_kw)
+                    reg.counter(
+                        "control.apsp0.hits" if apsp0.reused
+                        else "control.apsp0.misses"
+                    ).inc()
+                    if verify_apsp0 and apsp0.reused:
+                        scratch = refresh_apsp0(probs, None, **env_kw)
+                        if not (
+                            np.array_equal(apsp0.dist, scratch.dist)
+                            and np.array_equal(apsp0.nexthop, scratch.nexthop)
+                        ):
+                            raise AssertionError(
+                                f"control: epoch {epoch}: cached zero-load "
+                                "APSP diverged from the from-scratch solve "
+                                "(the Apsp0Cache key let a changed input "
+                                "through)"
+                            )
                     repaired = repair_fleet(
-                        probs, prev_state, masks, round_to=round_to,
-                        envelope=envelope, hop_bound=hop_bound,
-                        n_parts=part_env, use_pallas=use_pallas,
-                        interpret=interpret,
+                        probs, prev_state, masks, apsp0=apsp0, **env_kw
                     )
 
             mode = "warm" if repaired is not None else "cold"
@@ -487,6 +518,22 @@ def main(argv=None) -> int:
         help="assert the incremental per-epoch hop-bound cache matches a "
         "from-scratch closure bitwise (exactness gate; used by CI chaos)",
     )
+    ap.add_argument(
+        "--verify-apsp0", action="store_true",
+        help="assert the cached zero-load APSP behind each warm epoch's "
+        "repair matches a from-scratch solve bitwise (exactness gate; used "
+        "by CI chaos)",
+    )
+    ap.add_argument(
+        "--block-apps", type=int, default=1,
+        help="placement sweep schedule for every solve rung (1 = sequential "
+        "scan, k > 1 = blocked, 0 = one block; bitwise-invariant)",
+    )
+    ap.add_argument(
+        "--lane-chunk", type=int, default=None,
+        help="round-body layout over the instance axis (0 = fused vmap, "
+        "k >= 1 = lax.map lane chunks; default auto — see solve_fleet)",
+    )
     ap.add_argument("--shard", action="store_true")
     ap.add_argument("--devices", type=int, default=None)
     ap.add_argument(
@@ -546,6 +593,8 @@ def main(argv=None) -> int:
         devices=args.devices, timeout_s=args.timeout_s,
         backoff_s=args.backoff_s, compare_cold=args.compare_cold,
         verify_hop_bound=args.verify_hop_bound,
+        verify_apsp0=args.verify_apsp0,
+        block_apps=args.block_apps, lane_chunk=args.lane_chunk,
     )
     s = ctl.summary()
     print(

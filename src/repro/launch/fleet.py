@@ -114,6 +114,25 @@ def main(argv=None) -> int:
         "compiled (V, A, B) program",
     )
     ap.add_argument(
+        "--block-apps",
+        type=int,
+        default=1,
+        help="placement sweep schedule: 1 = the paper's sequential per-app "
+        "scan (default), k > 1 = blocked sweep with size-k batched "
+        "precompute, 0 = one block over all apps. Results are "
+        "bitwise-identical across block sizes",
+    )
+    ap.add_argument(
+        "--lane-chunk",
+        type=int,
+        default=None,
+        help="round-body layout over the instance axis: 0 = fused vmap (the "
+        "only layout compatible with --shard), k >= 1 = lax.map over k-lane "
+        "chunks (faster warm on a single host). Default: auto (chunked when "
+        "unsharded, vmap when a mesh is committed); bitwise-identical "
+        "results either way",
+    )
+    ap.add_argument(
         "--trace-out",
         default=None,
         help="write the host span trace to this JSONL path (a Chrome "
@@ -166,6 +185,8 @@ def main(argv=None) -> int:
             interpret=args.interpret,
             chunk_size=args.chunk_size,
             envelope_cap_gb=args.envelope_cap_gb,
+            block_apps=args.block_apps,
+            lane_chunk=args.lane_chunk,
         )
     dt = time.time() - t0
     print(
@@ -175,6 +196,8 @@ def main(argv=None) -> int:
                 "solver": args.solver,
                 "use_pallas": args.use_pallas,
                 "interpret": args.interpret,
+                "block_apps": args.block_apps,
+                "lane_chunk": args.lane_chunk,
                 "instances": res.n_instances,
                 # split depths in the batch (per-instance P also appears in
                 # each per_instance row as "partitions")

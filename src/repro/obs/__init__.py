@@ -20,6 +20,7 @@ Three layers (DESIGN.md section 14):
      launch CLIs' JSON and `benchmarks/run.py --json-out`.
 """
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry, registry  # noqa: F401
+from .phases import profile_round_phases  # noqa: F401
 from .roundtrace import FleetTrace  # noqa: F401
 from .trace import (  # noqa: F401
     TRACER,
